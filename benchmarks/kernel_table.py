@@ -1,0 +1,91 @@
+"""Kernel-plane benchmark: the Pallas compute unit across workload GEMMs.
+
+No TPU in this container, so wall-clock numbers would measure the Python
+interpreter, not the kernel.  Instead this reports the *structural* kernel
+metrics the DSE optimizes — chosen BlockSpec, VMEM working set, MXU
+efficiency, arithmetic intensity vs the v5e ridge point, and the modeled
+MXU-bound time per GEMM — and runs a correctness pass (interpret=True) of
+every kernel against its oracle at a reduced shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dse import default_block_for
+from repro.core.tiling import TPU_V5E
+from repro.kernels import ops, ref
+
+CASES = {
+    # label: (m, n, k) — per-device GEMMs from the assigned workloads
+    "qwen2.5-32b train mlp-up": (65536 // 16, 27648 // 16, 5120),
+    "qwen2.5-32b train qkv": (65536 // 16, 5120 // 16 + 1280, 5120),
+    "llama-90b train mlp-up": (65536 // 16, 28672 // 16, 8192),
+    "qwen2-0.5b decode lm-head": (128 // 16, 151936 // 16, 896),
+    "granite expert ffn": (512, 512, 1536),
+    "alexnet conv2 im2col": (27 * 27 * 4, 192, 64 * 25),
+}
+
+
+def structural_rows() -> list[dict]:
+    rows = []
+    ridge = TPU_V5E.peak_bf16_flops / TPU_V5E.hbm_bw
+    for label, (m, n, k) in CASES.items():
+        blk = default_block_for(m, n, k)
+        flops = 2.0 * m * n * k
+        mxu_s = flops / (TPU_V5E.peak_bf16_flops * blk.mxu_efficiency())
+        hbm_s = (m * k + k * n + m * n) * 2 / TPU_V5E.hbm_bw
+        rows.append({
+            "gemm": label,
+            "mnk": (m, n, k),
+            "block": (blk.bm, blk.bn, blk.bk),
+            "vmem_MiB": round(blk.vmem_bytes() / 2**20, 1),
+            "mxu_eff": round(blk.mxu_efficiency(), 3),
+            "ai": round(blk.arithmetic_intensity(), 1),
+            "ridge": round(ridge, 1),
+            "bound": "compute" if blk.arithmetic_intensity() >= ridge else "memory",
+            "mxu_us": round(mxu_s * 1e6, 1),
+            "hbm_us": round(hbm_s * 1e6, 1),
+        })
+    return rows
+
+
+def correctness_pass() -> dict:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (96, 160)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(key, 1), (160, 64)) * 0.3
+    mm = float(jnp.abs(ops.matmul_fp(x, w, interpret=True) - ref.matmul_ref(x, w)).max())
+    from repro.core.quantization import quantize
+    q = float(jnp.abs(
+        ops.matmul_q16(quantize(x), quantize(w), interpret=True).astype(jnp.int32)
+        - ref.matmul_q16_ref(quantize(x), quantize(w)).astype(jnp.int32)
+    ).max())
+    xi = jax.random.normal(key, (1, 10, 10, 4))
+    wi = jax.random.normal(jax.random.fold_in(key, 2), (3, 3, 4, 8)) * 0.3
+    cv = float(jnp.abs(ops.conv2d(xi, wi, interpret=True) - ref.conv2d_ref(xi, wi)).max())
+    qq = jax.random.normal(key, (1, 4, 64, 32)) * 0.3
+    kk = jax.random.normal(jax.random.fold_in(key, 3), (1, 2, 64, 32)) * 0.3
+    fa_out = ops.flash_attention(qq, kk, kk, causal=True, bq=32, bk=32, interpret=True)
+    qf = qq.reshape(1, 2, 2, 64, 32).reshape(4, 64, 32)
+    kf = jnp.broadcast_to(kk[:, :, None], (1, 2, 2, 64, 32)).reshape(4, 64, 32)
+    fa = float(jnp.abs(fa_out.reshape(4, 64, 32) - ref.attention_ref(qf, kf, kf)).max())
+    return {"matmul_fp": mm, "matmul_q16_raw": q, "conv2d": cv, "flash_attention": fa}
+
+
+def main():
+    print("== Kernel structural table (TPU v5e targets) ==")
+    print(f"{'gemm':28s} {'block':>16s} {'vmem':>6s} {'mxu':>5s} "
+          f"{'AI':>6s} {'bound':>8s} {'mxu_us':>8s} {'hbm_us':>8s}")
+    for r in structural_rows():
+        print(f"{r['gemm']:28s} {str(r['block']):>16s} {r['vmem_MiB']:6.1f} "
+              f"{r['mxu_eff']:5.2f} {r['ai']:6.1f} {r['bound']:>8s} "
+              f"{r['mxu_us']:8.1f} {r['hbm_us']:8.1f}")
+    print("\n== Kernel correctness vs oracles (interpret=True) ==")
+    for k, v in correctness_pass().items():
+        print(f"  {k:18s} max|err| = {v:.2e}")
+    return structural_rows()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness entry point: one module per paper table/finding.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+  table1          — paper Table 1 (resources + GOP/s, 3 ZYNQ boards)
+  table2          — paper Table 2 (vs Bjerge et al. on Ultra96)
+  dse_sweep       — paper §III.E tau≈2mu finding + TPU block DSE
+  kernel_table    — Pallas compute-unit structural metrics + oracle check
+  roofline_report — §Roofline table from the dry-run cache (if present)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main():
+    failures = []
+    for name in ("table1", "table2", "dse_sweep", "kernel_table"):
+        print("\n" + "=" * 72)
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    import os
+
+    for label, d in (("baseline", "experiments/dryrun"),
+                     ("optimized", "experiments/dryrun_opt")):
+        print("\n" + "=" * 72)
+        print(f"== Roofline ({label}) ==")
+        try:
+            from benchmarks import roofline_report
+
+            if not os.path.isdir(d):
+                print(f"(no {d} — run repro.launch.dryrun first)")
+                continue
+            rows = roofline_report.main(["--mesh", "16x16", "--dir", d])
+            if rows:
+                print(f"\n({label} roofline rows: {len(rows)} single-pod cells)")
+        except Exception:
+            traceback.print_exc()
+            failures.append(f"roofline_report:{label}")
+    if failures:
+        print(f"\nbenchmark FAILURES: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

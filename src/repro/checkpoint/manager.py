@@ -1,0 +1,153 @@
+"""Atomic checkpointing with elastic (cross-mesh) restore.
+
+Fault-tolerance contract:
+
+* **Atomicity** — a checkpoint is written to ``step_<n>.tmp-<pid>`` and
+  renamed to ``step_<n>`` only after every array and the metadata manifest
+  are fsync'd.  A crash mid-write leaves a ``.tmp`` dir that restore ignores
+  and the next save garbage-collects; the previous complete checkpoint is
+  never touched.
+* **Elastic restore** — arrays are stored unsharded (np.save per leaf); on
+  restore they are ``device_put`` against whatever shardings the *current*
+  mesh prescribes, so a job can come back on a different topology (e.g.
+  512 -> 256 chips after losing a pod) without conversion tooling.  On a real
+  multi-host deployment each host would read its local shard slice; the
+  single-process layout here keeps the same API.
+* **Determinism** — the data pipeline is a pure function of the step, so
+  (params, opt_state, step) is the complete resume state.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    """Atomically write ``tree`` as checkpoint ``step_<step>``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp-", dir=directory)
+    try:
+        flat = _flatten(tree)
+        names = {}
+        for i, (key, leaf) in enumerate(sorted(flat.items())):
+            fname = f"arr_{i:05d}.npy"
+            arr = np.asarray(jax.device_get(leaf))
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            names[key] = {"file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        manifest = {"step": step, "arrays": names, "extra": extra or {}}
+        mpath = os.path.join(tmp, _MANIFEST)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    # gc any stale tmp dirs from crashed writers
+    for d in os.listdir(directory):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and ".tmp" not in d:
+            if os.path.exists(os.path.join(directory, d, _MANIFEST)):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, target_tree: Any,
+            shardings: Optional[Any] = None) -> Any:
+    """Load checkpoint ``step`` into the structure of ``target_tree``.
+
+    ``shardings``: optional pytree of NamedSharding (same structure) — arrays
+    are placed onto them (elastic re-shard).  Without it, arrays go to the
+    default device.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    loaded = {}
+    for key, meta in manifest["arrays"].items():
+        if key not in flat_target:
+            raise KeyError(f"checkpoint key {key!r} missing from target tree")
+        arr = np.load(os.path.join(path, meta["file"]))
+        if list(arr.shape) != list(flat_target[key].shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != target {flat_target[key].shape}"
+            )
+        sh = flat_shard.get(key)
+        loaded[key] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+    missing = set(flat_target) - set(loaded)
+    if missing:
+        raise KeyError(f"target keys missing from checkpoint: {sorted(missing)[:5]}")
+    # rebuild the pytree in target order
+    paths, tdef = jax.tree_util.tree_flatten_with_path(target_tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in paths]
+    return tdef.unflatten([loaded[k] for k in keys])
+
+
+class CheckpointManager:
+    """Keep-last-N rotation + auto-resume."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+
+    def save(self, step: int, tree, extra: Optional[dict] = None) -> str:
+        path = save(self.directory, step, tree, extra)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1])
+            for d in os.listdir(self.directory)
+            if d.startswith("step_") and ".tmp" not in d
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.directory)
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = self.latest()
+        if step is None:
+            return None, None
+        return step, restore(self.directory, step, target_tree, shardings)

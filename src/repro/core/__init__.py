@@ -1,0 +1,34 @@
+"""Core of the reproduction: the paper's template-based accelerator design.
+
+- template.py      the unified compute unit (conv/FC/attention/MoE -> one GEMM op)
+- tiling.py        loop-tiling transformation (FPGA tiles + TPU BlockSpec tiles)
+- dse.py           design-space exploration over template parameters
+- fpga_model.py    analytic board model reproducing the paper's evaluation
+- quantization.py  16-bit fixed-point Q2.14 numerics
+- roofline.py      compiled-HLO roofline analysis for the TPU adaptation
+"""
+from .quantization import Q2_14, QFormat, dequantize, fake_quant_fmt, qmatmul_real, qmatmul_ref, quantize
+from .template import Template, TemplateConfig, default_template
+from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec
+from .roofline import RooflineReport, parse_collective_bytes, roofline_from_compiled
+
+__all__ = [
+    "Q2_14",
+    "QFormat",
+    "quantize",
+    "dequantize",
+    "fake_quant_fmt",
+    "qmatmul_ref",
+    "qmatmul_real",
+    "Template",
+    "TemplateConfig",
+    "default_template",
+    "ConvTiling",
+    "FCTiling",
+    "MatmulBlock",
+    "TpuSpec",
+    "TPU_V5E",
+    "RooflineReport",
+    "parse_collective_bytes",
+    "roofline_from_compiled",
+]

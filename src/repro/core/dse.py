@@ -1,0 +1,132 @@
+"""Design-space exploration (paper §III.E "Scalability and Efficiency").
+
+The paper uses trial-based exploration: sample template parameters, simulate,
+keep configurations that meet resources/latency.  We make the same search
+analytic and exhaustive over a quantized grid:
+
+* :func:`explore_board` — FPGA plane: enumerate (μ, τ, 𝒯, ℭ, λ, Ω) within a
+  board's DSP/BRAM/LUT/FF envelope and rank by modeled GOP/s on a target
+  network.  Reproduces the paper's per-board compute-unit choices and the
+  "τ ≈ 2μ" finding.
+
+* :func:`explore_tpu_block` — TPU plane: enumerate Pallas (bm, bn, bk) blocks
+  within the VMEM budget and rank by a roofline score (MXU occupancy ×
+  min(1, intensity/ridge)).  This picks the compute-unit configuration the
+  Pallas kernels use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Callable, Sequence
+
+from .fpga_model import Board, LayerSpec, TemplateInstance, evaluate_network
+from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec
+
+__all__ = [
+    "DseResult",
+    "explore_board",
+    "explore_tpu_block",
+    "default_block_for",
+]
+
+
+@dataclasses.dataclass
+class DseResult:
+    instance: TemplateInstance
+    gops: float
+    latency_ms: float
+
+    @property
+    def mu(self) -> int:
+        return self.instance.conv.mu
+
+    @property
+    def tau(self) -> int:
+        return self.instance.conv.tau
+
+
+def explore_board(
+    board: Board,
+    layers: Sequence[LayerSpec],
+    name: str = "net",
+    mu_range: Sequence[int] = (4, 8, 12, 16, 20, 24, 28, 32),
+    tau_range: Sequence[int] = (8, 12, 16, 20, 24, 30, 36, 44, 55, 64),
+    spatial_tiles: Sequence[int] = (13, 14, 26, 27, 28),
+    fc_tiles: Sequence[tuple[int, int]] = ((1024, 64), (2048, 128), (4096, 256)),
+    top: int = 10,
+) -> list[DseResult]:
+    """Exhaustive grid search over the template parameter space for a board."""
+    results: list[DseResult] = []
+    for mu, tau in itertools.product(mu_range, tau_range):
+        if mu * tau > board.dsp:
+            continue
+        for t_spatial in spatial_tiles:
+            conv = ConvTiling(t_r=t_spatial, t_c=t_spatial, mu=mu, tau=tau)
+            for lam, omega in fc_tiles:
+                fc = FCTiling(lam=lam, omega=omega, mu=mu, tau=tau)
+                inst = TemplateInstance(board=board, conv=conv, fc=fc)
+                if not inst.fits():
+                    continue
+                rep = evaluate_network(name, layers, inst)
+                results.append(
+                    DseResult(instance=inst, gops=rep.gops, latency_ms=rep.latency_ms)
+                )
+    results.sort(key=lambda r: -r.gops)
+    return results[:top]
+
+
+# ---------------------------------------------------------------------------
+# TPU plane
+# ---------------------------------------------------------------------------
+
+
+def _block_score(
+    block: MatmulBlock, m: int, n: int, k: int, spec: TpuSpec, dtype_bytes: int = 2
+) -> float:
+    """Roofline score for one grid step of the tiled matmul.
+
+    peak-normalized throughput = MXU efficiency x min(1, AI / ridge) x
+    quantization-waste factor from ceil-division of the problem dims
+    (the TPU analogue of the paper's ceil(p/μ)·ceil(q/τ) waste).
+    """
+    ridge = spec.peak_bf16_flops / spec.hbm_bw  # FLOP/byte to be compute bound
+    ai = block.arithmetic_intensity(dtype_bytes)
+    waste = (
+        (m / (max(1, -(-m // block.bm)) * block.bm))
+        * (n / (max(1, -(-n // block.bn)) * block.bn))
+        * (k / (max(1, -(-k // block.bk)) * block.bk))
+    )
+    return block.mxu_efficiency(spec) * min(1.0, ai / ridge) * waste
+
+
+def explore_tpu_block(
+    m: int,
+    n: int,
+    k: int,
+    spec: TpuSpec = TPU_V5E,
+    dtype_bytes: int = 2,
+    bm_range: Sequence[int] = (128, 256, 512, 1024),
+    bn_range: Sequence[int] = (128, 256, 512, 1024, 2048),
+    bk_range: Sequence[int] = (128, 256, 512, 1024, 2048),
+    top: int = 5,
+) -> list[tuple[MatmulBlock, float]]:
+    """Enumerate legal Pallas blocks for an (m, n, k) GEMM; rank by score."""
+    out: list[tuple[MatmulBlock, float]] = []
+    for bm, bn, bk in itertools.product(bm_range, bn_range, bk_range):
+        block = MatmulBlock(bm=bm, bn=bn, bk=bk)
+        if not block.legal(m, n, k, spec):
+            continue
+        out.append((block, _block_score(block, m, n, k, spec, dtype_bytes)))
+    out.sort(key=lambda t: -t[1])
+    return out[:top]
+
+
+def default_block_for(m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> MatmulBlock:
+    """Best-scoring legal block, with a safe fallback for tiny problems."""
+    ranked = explore_tpu_block(m, n, k, spec)
+    if ranked:
+        return ranked[0][0]
+    from .tiling import clamp_block
+
+    return clamp_block(m, n, k, MatmulBlock(128, 128, 128), spec)

@@ -1,0 +1,469 @@
+"""Post-optimization HLO analyzer with while-loop trip-count attribution.
+
+``compiled.cost_analysis()`` counts a while-loop *body once*, regardless of
+trip count — under scan-over-layers that undercounts FLOPs, bytes and
+collectives by ~n_layers.  This module re-derives the three roofline inputs
+by walking the call graph of ``compiled.as_text()``:
+
+  * **flops** — 2 x result_elems x contracted_elems for every ``dot``
+    (+ convolutions), multiplied by the product of enclosing
+    ``known_trip_count``s.  Elementwise flops are ignored (<1% for LM
+    workloads; documented).
+  * **bytes** — per materializing op: operand bytes + result bytes (fusion
+    internals excluded — they live in registers/VMEM; dynamic-update-slice
+    counted as 2x update size since XLA performs it in place).  This is an
+    HBM-traffic estimate in the same spirit as cost_analysis' "bytes
+    accessed", with loop attribution.
+  * **wire_bytes** — per-device interconnect traffic per collective with ring
+    factors (g = group size, S = result bytes):
+        all-reduce 2S(g-1)/g | all-gather S(g-1)/g | reduce-scatter S(g-1)
+        all-to-all S(g-1)/g  | collective-permute S
+
+Also records the top-k largest GEMMs and per-collective byte totals — the
+"profile" used by the §Perf hillclimb loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloStats", "analyze_hlo", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s4": 1, "u4": 1,  # round up
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CALLED_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call", "rng-bit-generator",
+}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for t, dims in _SHAPE_RE.findall(type_str):
+        if t in DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((t, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    total = 0
+    for t, dims in shapes:
+        n = DTYPE_BYTES[t]
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_shapes: list
+    rhs: str  # full text after '='
+
+    @property
+    def result_bytes(self) -> int:
+        return _nbytes(self.result_shapes)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    params: Dict[str, list]  # param name -> shapes
+    ops: List[_Op]
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    dtype_corrected_bytes: float = 0.0  # bytes saved by the shadow-bf16 pass
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_static_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    top_dots: List[dict] = dataclasses.field(default_factory=list)
+    top_colls: List[dict] = dataclasses.field(default_factory=list)
+
+    def finalize(self, top: int = 12) -> "HloStats":
+        self.top_dots = sorted(self.top_dots, key=lambda d: -d["flops"])[:top]
+        self.top_colls = sorted(self.top_colls, key=lambda d: -d["wire_bytes"])[:top]
+        return self
+
+
+def _split_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line)
+            if m and line.endswith("{"):
+                params = {}
+                for part in _split_top_level(m.group(2)):
+                    if ":" in part:
+                        pname, ptype = part.split(":", 1)
+                        params[pname.strip().lstrip("%")] = _parse_shapes(ptype)
+                cur = _Computation(m.group(1), params, [])
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type = rhs text before the instruction token
+        instr_m = re.search(r"([a-z][\w\-]*)\(", rhs)
+        kind = instr_m.group(1) if instr_m else "unknown"
+        head = rhs[: instr_m.start()] if instr_m else rhs
+        cur.ops.append(_Op(name, kind, _parse_shapes(head), rhs))
+    return comps
+
+
+def _split_top_level(s: str) -> List[str]:
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(s[start:i])
+            start = i + 1
+    if s[start:].strip():
+        parts.append(s[start:])
+    return parts
+
+
+def _operand_names(rhs: str) -> List[str]:
+    lp = rhs.index("(")
+    depth = 0
+    for i in range(lp, len(rhs)):
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+            if depth == 0:
+                inner = rhs[lp + 1 : i]
+                return [
+                    m.group(1)
+                    for part in _split_top_level(inner)
+                    for m in [_OPERAND_RE.search(part)]
+                    if m
+                ]
+    return []
+
+
+def _group_size(rhs: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rhs)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(rhs)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return total_devices
+
+
+def _dot_flops(op: _Op, symtab: Dict[str, list]) -> float:
+    result_elems = 1
+    for _, dims in op.result_shapes:
+        for d in dims:
+            result_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rhs)
+    contracted = 1
+    if m:
+        lhs_name = _operand_names(op.rhs)
+        lhs_shapes = symtab.get(lhs_name[0]) if lhs_name else None
+        if lhs_shapes:
+            dims = lhs_shapes[0][1]
+            for idx in m.group(1).split(","):
+                if idx != "" and int(idx) < len(dims):
+                    contracted *= dims[int(idx)]
+    return 2.0 * result_elems * contracted
+
+
+def _conv_flops(op: _Op, symtab: Dict[str, list]) -> float:
+    # flops ~= 2 * result_elems * (kernel_elems / out_features)
+    result_elems = 1
+    for _, dims in op.result_shapes:
+        for d in dims:
+            result_elems *= d
+    names = _operand_names(op.rhs)
+    if len(names) < 2 or names[1] not in symtab:
+        return 0.0
+    kdims = symtab[names[1]][0][1]
+    kernel_elems = 1
+    for d in kdims:
+        kernel_elems *= d
+    m = re.search(r"dim_labels=[^,]*_[^-,]*o", op.rhs)
+    # fall back: assume last kernel dim is output features
+    out_feat = kdims[-1] if kdims else 1
+    return 2.0 * result_elems * (kernel_elems / max(out_feat, 1))
+
+
+# ---------------------------------------------------------------------------
+# shadow-bf16 pass: undo XLA:CPU FloatNormalization for the TPU roofline
+# ---------------------------------------------------------------------------
+#
+# XLA:CPU has no native bf16 compute, so FloatNormalization legalizes every
+# requested-bf16 op into convert(bf16->f32) -> f32 op -> convert(f32->bf16).
+# On the TPU target those ops run at bf16 (the MXU accumulates f32
+# *internally*), so counting their HLO bytes at 4 B/elem double-counts HBM
+# and wire traffic.  The pass marks f32 values as "shadow bf16" when every
+# transitive consumer path ends in a downcast-to-bf16 while passing only
+# through dtype-preserving ops — intentional f32 math (softmax scores, norm
+# statistics, the f32 optimizer state) keeps full width because its
+# consumers are real f32 computations, not downcasts.
+
+_PASSTHROUGH = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "copy", "transpose", "reshape", "add", "dot",
+    "all-reduce-start", "all-reduce-done", "all-gather-start",
+    "all-gather-done", "bitcast", "slice", "dynamic-slice", "concatenate",
+    "get-tuple-element",  # variadic collectives unpack through GTEs
+}
+
+
+def _f32_result(op: _Op) -> bool:
+    # single f32 result, or a variadic (tuple) op whose elements are all f32
+    return bool(op.result_shapes) and all(
+        t == "f32" for t, _ in op.result_shapes
+    )
+
+
+def _conv_kinds(op: _Op, comps) -> str:
+    """'up' (bf16->f32), 'down' (f32->bf16) or '' for non-convert ops.
+
+    Detects both raw converts and convert-only kLoop fusions (XLA wraps
+    normalization converts into wrapped_convert fusions)."""
+    kind = op.kind
+    if kind == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+        inner = comps.get(m.group(1)) if m else None
+        if inner is None:
+            return ""
+        body = [o for o in inner.ops if o.kind != "parameter"]
+        if len(body) != 1 or body[0].kind != "convert":
+            return ""
+        kind = "convert"
+    if kind != "convert" or len(op.result_shapes) != 1:
+        return ""
+    res_t = op.result_shapes[0][0]
+    if res_t == "f32":
+        return "up"
+    if res_t == "bf16":
+        return "down"
+    return ""
+
+
+def _shadow_bf16(comp: _Computation, comps) -> set:
+    """Names of f32 values in ``comp`` that would be bf16 on TPU."""
+    uses: Dict[str, list] = {}
+    convk = {op.name: _conv_kinds(op, comps) for op in comp.ops}
+    for op in comp.ops:
+        for n in (_operand_names(op.rhs) if "(" in op.rhs else []):
+            uses.setdefault(n, []).append(op)
+    shadow: set = set()
+    # iterate to fixpoint (consumer chains are short; 2 rounds suffice)
+    for _ in range(4):
+        changed = False
+        for op in reversed(comp.ops):
+            if op.name in shadow or not _f32_result(op):
+                continue
+            if op.kind not in _PASSTHROUGH and convk.get(op.name) != "up":
+                continue
+            consumers = uses.get(op.name, [])
+            if not consumers:
+                continue
+            ok = all(
+                convk.get(c.name) == "down" or c.name in shadow
+                for c in consumers
+            )
+            if ok:
+                shadow.add(op.name)
+                changed = True
+        if not changed:
+            break
+    return shadow
+
+
+def analyze_hlo(hlo: str, total_devices: int = 1, top: int = 12,
+                tpu_dtype_correction: bool = True) -> HloStats:
+    comps = _split_computations(hlo)
+    entry_name = None
+    for raw in hlo.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_HEAD_RE.match(raw)
+            if m:
+                entry_name = m.group(1)
+            break
+    if entry_name is None or entry_name not in comps:
+        # fall back: the last computation is usually the entry
+        entry_name = list(comps)[-1]
+
+    stats = HloStats()
+    visiting: set = set()
+
+    def walk(comp_name: str, mult: float, count_bytes: bool):
+        if comp_name not in comps or comp_name in visiting:
+            return
+        visiting.add(comp_name)
+        comp = comps[comp_name]
+        symtab: Dict[str, list] = dict(comp.params)
+        for op in comp.ops:
+            symtab[op.name] = op.result_shapes
+        shadow = _shadow_bf16(comp, comps) if tpu_dtype_correction else set()
+        convk = (
+            {op.name: _conv_kinds(op, comps) for op in comp.ops}
+            if tpu_dtype_correction else {}
+        )
+
+        def val_bytes(name: str) -> float:
+            """Bytes of a value at its TPU wire width."""
+            b = float(_nbytes(symtab.get(name, [])))
+            if name in shadow or convk.get(name) == "up":
+                b *= 0.5  # f32 here, bf16 on the TPU target
+            return b
+
+        for op in comp.ops:
+            kind = op.kind
+            if kind == "while":
+                t = _TRIP_RE.search(op.rhs)
+                trip = float(t.group(1)) if t else 1.0
+                called = dict(
+                    (m.group(0).split("=")[0], m.group(1))
+                    for m in _CALLED_RE.finditer(op.rhs)
+                )
+                body = re.search(r"body=%?([\w.\-]+)", op.rhs)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.rhs)
+                if body:
+                    walk(body.group(1), mult * trip, count_bytes)
+                if cond:
+                    walk(cond.group(1), mult * trip, False)
+                continue
+            if kind in ("call", "conditional"):
+                for m in _CALLED_RE.finditer(op.rhs):
+                    walk(m.group(1), mult, count_bytes)
+                continue
+            if kind == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.rhs)
+                if m:
+                    walk(m.group(1), mult, False)  # flops inside, bytes at op level
+            if kind == "dot":
+                f = _dot_flops(op, symtab) * mult
+                stats.flops += f
+                meta = re.search(r'op_name="([^"]*)"', op.rhs)
+                stats.top_dots.append({
+                    "flops": f,
+                    "result": op.rhs.split(" dot(")[0].strip(),
+                    "op_name": meta.group(1) if meta else "",
+                    "mult": mult,
+                })
+            elif kind == "convolution":
+                stats.flops += _conv_flops(op, symtab) * mult
+            else:
+                base = kind.replace("-start", "")
+                if base in _COLLECTIVES:
+                    size = op.result_bytes
+                    if op.name in shadow:
+                        size *= 0.5  # wire at bf16 on TPU
+                    # all-gather/all-reduce done-ops repeat the shape; the
+                    # -done op has no operands list worth counting
+                    if kind.endswith("-done"):
+                        continue
+                    g = _group_size(op.rhs, total_devices)
+                    if base == "all-reduce":
+                        wire = 2.0 * size * (g - 1) / g
+                    elif base == "all-gather":
+                        wire = size * (g - 1) / g
+                    elif base == "reduce-scatter":
+                        wire = float(size) * (g - 1)
+                    elif base == "all-to-all":
+                        wire = size * (g - 1) / g
+                    else:
+                        wire = float(size)
+                    stats.wire_bytes += wire * mult
+                    stats.coll_counts[base] = stats.coll_counts.get(base, 0) + int(mult)
+                    stats.coll_static_counts[base] = (
+                        stats.coll_static_counts.get(base, 0) + 1
+                    )
+                    stats.coll_bytes[base] = (
+                        stats.coll_bytes.get(base, 0.0) + wire * mult
+                    )
+                    meta = re.search(r'op_name="([^"]*)"', op.rhs)
+                    stats.top_colls.append({
+                        "wire_bytes": wire * mult,
+                        "op": base,
+                        "result": op.rhs.split(f" {kind}(")[0].strip(),
+                        "group": g,
+                        "op_name": meta.group(1) if meta else "",
+                        "mult": mult,
+                    })
+            if count_bytes and kind not in _NO_BYTES:
+                if convk.get(op.name):
+                    # normalization converts are fused into their neighbors
+                    # on TPU: no HBM round trip
+                    stats.dtype_corrected_bytes += (
+                        op.result_bytes + sum(
+                            _nbytes(symtab.get(n, []))
+                            for n in _operand_names(op.rhs))
+                    ) * mult
+                    continue
+                full = 0.0
+                if kind == "dynamic-update-slice":
+                    # in-place: touches update bytes twice (read + write)
+                    names = _operand_names(op.rhs)
+                    upd = _nbytes(symtab.get(names[1], [])) if len(names) > 1 else 0
+                    b = 2.0 * (val_bytes(names[1]) if len(names) > 1 else 0) * mult
+                    full = 2.0 * upd * mult
+                elif kind in ("dynamic-slice", "slice", "gather"):
+                    # reads only the sliced/gathered region, not the operand
+                    b = 2.0 * op.result_bytes * mult
+                    if op.name in shadow:
+                        b *= 0.5
+                    full = 2.0 * op.result_bytes * mult
+                else:
+                    res = float(op.result_bytes)
+                    if op.name in shadow:
+                        res *= 0.5
+                    operand_bytes = sum(
+                        val_bytes(n) for n in _operand_names(op.rhs)
+                    )
+                    full_operands = sum(
+                        _nbytes(symtab.get(n, [])) for n in _operand_names(op.rhs)
+                    )
+                    b = (res + operand_bytes) * mult
+                    full = (op.result_bytes + full_operands) * mult
+                stats.bytes += b
+                stats.dtype_corrected_bytes += max(full - b, 0.0)
+                stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + b
+        visiting.discard(comp_name)
+
+    walk(entry_name, 1.0, True)
+    return stats.finalize(top)

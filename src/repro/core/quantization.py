@@ -1,0 +1,162 @@
+"""Fixed-point Q-format quantization (paper §III.E: 16-bit, Q2.14).
+
+The paper quantizes weights and activations to 16-bit fixed point with 2
+integer bits and 14 fractional bits ("2.14 format"), i.e. values in
+[-2, 2 - 2^-14] with resolution 2^-14.  This module provides:
+
+  * :class:`QFormat` — a general Qm.n fixed-point format descriptor.
+  * ``quantize`` / ``dequantize`` — float <-> int16 conversion with
+    round-to-nearest and saturation.
+  * ``fake_quant`` — straight-through-estimator quantization for training-time
+    simulation of the deployed numerics.
+  * ``qmatmul_ref`` — the *semantic definition* of the fixed-point matmul the
+    Pallas kernel implements: int16 x int16 products accumulated in int32
+    (TPU-native accumulator; the FPGA DSP48 cascade uses 48 bits — see
+    DESIGN.md §2 for the documented difference), followed by a saturating
+    right-shift write-back to Q2.14.
+
+All functions are jit-safe and differentiable where meaningful.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QFormat",
+    "Q2_14",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "qmatmul_ref",
+    "requantize_i32_to_i16",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed point, paper convention: ``int_bits`` *includes* the sign.
+
+    Q2.14 = 2 integer bits (one of which is the sign) + 14 fractional bits
+    = 16 bits total, representable range [-2, 2 - 2^-14] ("two bits integer
+    and fourteen bits fractional", paper §II/§III.E).  Storage is int16, so
+    int_bits + frac_bits must be <= 16.
+    """
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self):
+        if self.int_bits + self.frac_bits > 16:
+            raise ValueError("Qm.n with m+n > 16 does not fit int16 storage")
+        if self.int_bits < 1:
+            raise ValueError("need at least the sign bit")
+
+    @property
+    def scale(self) -> float:
+        """Multiplier from real value to raw integer."""
+        return float(1 << self.frac_bits)
+
+    @property
+    def max_val(self) -> float:
+        """Largest representable real value."""
+        return 2.0 ** (self.int_bits - 1) - 2.0 ** (-self.frac_bits)
+
+    @property
+    def min_val(self) -> float:
+        return -(2.0 ** (self.int_bits - 1))
+
+    @property
+    def raw_max(self) -> int:
+        return (1 << (self.int_bits - 1 + self.frac_bits)) - 1
+
+    @property
+    def raw_min(self) -> int:
+        return -(1 << (self.int_bits - 1 + self.frac_bits))
+
+    @property
+    def resolution(self) -> float:
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def name(self) -> str:
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+
+#: The paper's format: 2 integer bits, 14 fractional bits.
+Q2_14 = QFormat(int_bits=2, frac_bits=14)
+
+
+def quantize(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """Real -> int16 raw fixed point, round-to-nearest-even, saturating."""
+    raw = jnp.round(x.astype(jnp.float32) * fmt.scale)
+    raw = jnp.clip(raw, fmt.raw_min, fmt.raw_max)
+    return raw.astype(jnp.int16)
+
+
+def dequantize(q: jax.Array, fmt: QFormat = Q2_14, dtype=jnp.float32) -> jax.Array:
+    """Raw fixed point -> real."""
+    return (q.astype(jnp.float32) * (1.0 / fmt.scale)).astype(dtype)
+
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: float, lo: float, hi: float) -> jax.Array:
+    q = jnp.clip(jnp.round(x * scale) / scale, lo, hi)
+    return q.astype(x.dtype)
+
+
+def _fq_fwd(x, scale, lo, hi):
+    return fake_quant(x, scale, lo, hi), (x, lo, hi)
+
+
+def _fq_bwd(res, g):
+    # Straight-through estimator, gated outside the representable range.
+    x, lo, hi = res
+    mask = ((x >= lo) & (x <= hi)).astype(g.dtype)
+    return (g * mask, None, None, None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_fmt(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """STE fake-quantization to ``fmt`` (for quantization-aware training)."""
+    return fake_quant(x, fmt.scale, fmt.min_val, fmt.max_val)
+
+
+def requantize_i32_to_i16(acc: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """Saturating write-back of an int32 accumulator to Qm.n int16.
+
+    The accumulator holds values at scale 2^(2*frac_bits) (product of two
+    Qm.n numbers); shift right by frac_bits with round-to-nearest, then
+    saturate into the int16 raw range.  This models the FPGA accumulator
+    write-back stage.
+    """
+    rounding = jnp.int32(1 << (fmt.frac_bits - 1))
+    shifted = (acc + rounding) >> fmt.frac_bits
+    return jnp.clip(shifted, fmt.raw_min, fmt.raw_max).astype(jnp.int16)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def qmatmul_ref(xq: jax.Array, wq: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """Semantic oracle for the fixed-point matmul kernel.
+
+    xq: (m, k) int16 raw, wq: (k, n) int16 raw  ->  (m, n) int16 raw.
+    int32 accumulation (wraparound, TPU-native), saturating Q write-back.
+    """
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return requantize_i32_to_i16(acc, fmt)
+
+
+def qmatmul_real(x: jax.Array, w: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """Quantize real inputs, run the fixed-point matmul, dequantize.
+
+    This is the end-to-end numerics an FPGA deployment of the paper sees for
+    one GEMM: float reference -> Q2.14 -> dot -> Q2.14 -> float.
+    """
+    return dequantize(qmatmul_ref(quantize(x, fmt), quantize(w, fmt), fmt), fmt)

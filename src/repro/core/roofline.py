@@ -1,0 +1,243 @@
+"""TPU roofline analysis from compiled HLO (no hardware required).
+
+Three terms per (architecture x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = wire_bytes_per_device / ICI_link_bw
+
+``compiled.cost_analysis()`` supplies per-device FLOPs and bytes.  Collective
+bytes are NOT in cost_analysis: we parse the post-optimization HLO
+(``compiled.as_text()``) and model per-device wire traffic per op with ring
+algorithm factors (g = replica group size, S = result bytes):
+
+    all-reduce          2 * S * (g-1)/g
+    all-gather          S * (g-1)/g
+    reduce-scatter      S * (g-1)        (operand = g * result)
+    all-to-all          S * (g-1)/g
+    collective-permute  S
+
+This is the whole-program generalization of the paper's per-tile ping-pong
+bound: latency >= max(compute, transfer) — here transfer splits into HBM and
+interconnect terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from .tiling import TPU_V5E, TpuSpec
+
+__all__ = [
+    "CollectiveStats",
+    "RooflineReport",
+    "parse_collective_bytes",
+    "roofline_from_compiled",
+    "model_flops",
+]
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+# matches every result shape in a (possibly tuple-typed) HLO instruction
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `replica_groups=[4,2]<=...` (iota) or `replica_groups={{0,1},{2,3}}`
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str, dims_str: str) -> int:
+    if type_str not in _DTYPE_BYTES:
+        return 0
+    elems = 1
+    if dims_str:
+        for d in dims_str.split(","):
+            elems *= int(d)
+    return elems * _DTYPE_BYTES[type_str]
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0  # per-device bytes on the interconnect (ring model)
+    operand_bytes: float = 0.0  # naive sum of result sizes (for reference)
+    counts: dict = dataclasses.field(default_factory=dict)
+    by_op_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, op: str, wire: float, operand: float) -> None:
+        self.wire_bytes += wire
+        self.operand_bytes += operand
+        self.counts[op] = self.counts.get(op, 0) + 1
+        self.by_op_bytes[op] = self.by_op_bytes.get(op, 0.0) + wire
+
+
+def parse_collective_bytes(hlo_text: str, total_devices: int = 1) -> CollectiveStats:
+    """Sum per-device wire bytes over every collective in optimized HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, _, rhs = stripped.partition("=")
+        rhs = rhs.strip()
+        op = None
+        for cand in _COLLECTIVE_OPS:
+            # match `bf16[..] all-gather(`, incl. async `all-gather-start(`
+            if f" {cand}(" in f" {rhs}" or f"{cand}-start(" in rhs:
+                op = cand
+                break
+        if op is None:
+            continue
+        # result shapes: everything before the opening paren of the op call
+        head = rhs.split(op)[0]
+        shapes = _SHAPE_RE.findall(head)
+        size = sum(_shape_bytes(t, d) for t, d in shapes)
+        if size == 0:
+            continue
+        g = max(2, _group_size(stripped, total_devices))
+        if op == "all-reduce":
+            wire = 2.0 * size * (g - 1) / g
+        elif op == "all-gather":
+            wire = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = float(size) * (g - 1)
+        elif op == "all-to-all":
+            wire = size * (g - 1) / g
+        else:  # collective-permute
+            wire = float(size)
+        stats.add(op, wire, float(size))
+    return stats
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw measurements (per device)
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes: float
+    collective_counts: dict
+    collective_by_op: dict
+    # derived terms, seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # usefulness
+    model_flops_total: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    # memory fit
+    per_device_mem_bytes: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent in the best-case (compute) bound.
+
+        1.0 means perfectly compute-bound at peak; lower means memory or
+        collectives dominate or compute is wasted vs model FLOPs.
+        """
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.compute_s / self.bound_s) * self.useful_ratio
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "wire_bytes_per_dev": self.wire_bytes,
+            "per_device_mem_bytes": self.per_device_mem_bytes,
+            "collective_counts": self.collective_counts,
+            "collective_by_op": self.collective_by_op,
+        }
+
+
+def model_flops(n_params_active: float, tokens: float, training: bool) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward."""
+    return (6.0 if training else 2.0) * n_params_active * tokens
+
+
+def roofline_from_compiled(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost_analysis: dict,
+    hlo_text: str,
+    n_params_active: float,
+    tokens: float,
+    training: bool,
+    spec: TpuSpec = TPU_V5E,
+    per_device_mem_bytes: Optional[float] = None,
+) -> RooflineReport:
+    flops = float(cost_analysis.get("flops", 0.0))
+    byts = float(cost_analysis.get("bytes accessed", 0.0))
+    colls = parse_collective_bytes(hlo_text, total_devices=chips)
+    mflops = model_flops(n_params_active, tokens, training)
+    total_hlo_flops = flops * chips
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        wire_bytes=colls.wire_bytes,
+        collective_counts=colls.counts,
+        collective_by_op={k: round(v) for k, v in colls.by_op_bytes.items()},
+        compute_s=flops / spec.peak_bf16_flops,
+        memory_s=byts / spec.hbm_bw,
+        collective_s=colls.wire_bytes / spec.ici_bw,
+        model_flops_total=mflops,
+        useful_ratio=(mflops / total_hlo_flops) if total_hlo_flops else 0.0,
+        per_device_mem_bytes=per_device_mem_bytes,
+    )

@@ -1,0 +1,200 @@
+"""Loop-tiling transformation (paper §III.B) — tile legality and footprints.
+
+Two planes:
+
+* **FPGA plane** (paper-faithful): conv tiles (𝒯, ℭ, μ, τ) and FC tiles
+  (λ, Ω) determine BRAM buffer footprints and the per-invocation fixed
+  computation of the μ×τ compute unit.  Used by ``fpga_model`` and ``dse``.
+
+* **TPU plane** (hardware adaptation): Pallas BlockSpec tiles (bm, bn, bk)
+  determine the VMEM working set and MXU alignment.  Used by the Pallas
+  kernels and the TPU-side DSE.
+
+Both are *the same transformation* — convert variable layer loops into fixed
+blocks sized to on-chip memory — instantiated for two memory hierarchies.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "ConvTiling",
+    "FCTiling",
+    "MatmulBlock",
+    "TPU_V5E",
+    "TpuSpec",
+    "ceil_div",
+]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# FPGA plane
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTiling:
+    """Conv loop-tiling factors (paper notation: 𝒯, ℭ, μ, τ)."""
+
+    t_r: int  # output-row tile 𝒯
+    t_c: int  # output-col tile ℭ
+    mu: int  # input-channel tile μ  (compute-unit input width)
+    tau: int  # output-channel tile τ (compute-unit output width)
+
+    def eff_spatial(self, r: int, c: int) -> tuple[int, int]:
+        """HLS templates bound the tile loop by min(tile, layer dim)."""
+        return min(self.t_r, r), min(self.t_c, c)
+
+    def num_invocations(self, r: int, c: int, p: int, q: int) -> int:
+        """Tile invocations to cover an output of r x c x q from p channels."""
+        tr, tc = self.eff_spatial(r, c)
+        return (
+            ceil_div(r, tr)
+            * ceil_div(c, tc)
+            * ceil_div(p, self.mu)
+            * ceil_div(q, self.tau)
+        )
+
+    def compute_cycles_per_invocation(self, k: int, r: int = None, c: int = None) -> int:
+        """Fig. 4 dataflow: one μ×τ MAC wave per (spatial, tap) position.
+
+        II=1 pipeline over 𝒯'·ℭ'·K² positions (effective tile).
+        """
+        tr, tc = self.eff_spatial(r or self.t_r, c or self.t_c)
+        return tr * tc * k * k
+
+    def input_tile_elems(self, k: int, stride: int = 1) -> int:
+        h = stride * self.t_r + k - stride
+        w = stride * self.t_c + k - stride
+        return h * w * self.mu
+
+    def weight_tile_elems(self, k: int) -> int:
+        return self.mu * self.tau * k * k
+
+    def output_tile_elems(self) -> int:
+        return self.t_r * self.t_c * self.tau
+
+
+@dataclasses.dataclass(frozen=True)
+class FCTiling:
+    """FC loop-tiling factors (paper notation: λ, Ω) over the same μ×τ unit.
+
+    λ/Ω are the BRAM-resident vector tiles; the compute unit consumes them in
+    (μ, τ) sub-blocks (paper Fig. 5).
+    """
+
+    lam: int  # input-neuron tile λ
+    omega: int  # output-neuron tile Ω
+    mu: int
+    tau: int
+
+    def num_invocations(self, p: int, q: int) -> int:
+        return ceil_div(p, self.lam) * ceil_div(q, self.omega)
+
+    def compute_cycles_per_invocation(self) -> int:
+        # (λ/μ)·(Ω/τ) sub-blocks, each one MAC wave per μ-element column.
+        return ceil_div(self.lam, self.mu) * ceil_div(self.omega, self.tau)
+
+    def input_tile_elems(self) -> int:
+        return self.lam
+
+    def weight_tile_elems(self) -> int:
+        return self.lam * self.omega
+
+    def output_tile_elems(self) -> int:
+        return self.omega
+
+
+# ---------------------------------------------------------------------------
+# TPU plane
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    """Per-chip TPU hardware description used by tiling/DSE/roofline."""
+
+    name: str = "tpu_v5e"
+    peak_bf16_flops: float = 197e12  # FLOP/s
+    hbm_bw: float = 819e9  # bytes/s
+    ici_bw: float = 50e9  # bytes/s per link
+    vmem_bytes: int = 64 * 1024 * 1024  # usable VMEM budget we tile against
+    mxu_dim: int = 128  # systolic array edge
+    lane: int = 128  # last-dim register lane count
+    sublane: int = 8  # second-minor dim granularity (f32)
+
+
+TPU_V5E = TpuSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulBlock:
+    """Pallas BlockSpec tile for the unified matmul compute unit.
+
+    This is the TPU analogue of the paper's (μ, τ) compute-unit config:
+    ``bm`` plays μ's role (inputs consumed per wave), ``bn`` plays τ's
+    (outputs produced per wave), ``bk`` is the reduction tile streamed from
+    HBM (the paper streams K² taps).
+    """
+
+    bm: int = 512
+    bn: int = 512
+    bk: int = 512
+
+    def vmem_bytes(self, in_dtype_bytes: int = 2, acc_bytes: int = 4) -> int:
+        # x-tile + w-tile (double-buffered by the Pallas pipeline: x2) +
+        # f32 accumulator + output tile.
+        x = self.bm * self.bk * in_dtype_bytes * 2
+        w = self.bk * self.bn * in_dtype_bytes * 2
+        acc = self.bm * self.bn * acc_bytes
+        out = self.bm * self.bn * in_dtype_bytes * 2
+        return x + w + acc + out
+
+    def aligned(self, spec: TpuSpec = TPU_V5E) -> bool:
+        return (
+            self.bm % spec.sublane == 0
+            and self.bn % spec.lane == 0
+            and self.bk % spec.lane == 0
+        )
+
+    def mxu_efficiency(self, spec: TpuSpec = TPU_V5E) -> float:
+        """Fraction of MXU issue slots doing useful work for this tile."""
+
+        def frac(dim: int) -> float:
+            return dim / (ceil_div(dim, spec.mxu_dim) * spec.mxu_dim)
+
+        return frac(self.bm) * frac(self.bn) * frac(self.bk)
+
+    def arithmetic_intensity(self, in_dtype_bytes: int = 2) -> float:
+        """FLOPs per HBM byte for one grid step (higher = more compute bound)."""
+        flops = 2 * self.bm * self.bn * self.bk
+        bytes_moved = (self.bm * self.bk + self.bk * self.bn) * in_dtype_bytes
+        return flops / bytes_moved
+
+    def legal(self, m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> bool:
+        return (
+            self.aligned(spec)
+            and self.vmem_bytes() <= spec.vmem_bytes
+            and self.bm <= max(m, spec.sublane)
+            and self.bn <= max(n, spec.lane)
+            and self.bk <= max(k, spec.lane)
+        )
+
+
+def clamp_block(m: int, n: int, k: int, block: MatmulBlock, spec: TpuSpec = TPU_V5E) -> MatmulBlock:
+    """Shrink a block to fit a (possibly small) problem, keeping alignment."""
+
+    def shrink(dim: int, b: int, gran: int) -> int:
+        b = min(b, max(gran, math.ceil(dim / gran) * gran))
+        return max(gran, b - b % gran)
+
+    return MatmulBlock(
+        bm=shrink(m, block.bm, spec.sublane),
+        bn=shrink(n, block.bn, spec.lane),
+        bk=shrink(k, block.bk, spec.lane),
+    )

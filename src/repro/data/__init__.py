@@ -1,0 +1,3 @@
+from .pipeline import DataPipeline, make_pipeline, synthetic_batch
+
+__all__ = ["DataPipeline", "make_pipeline", "synthetic_batch"]

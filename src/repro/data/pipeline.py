@@ -1,0 +1,127 @@
+"""Deterministic synthetic data pipeline, sharded onto the mesh.
+
+Production data loaders are I/O systems; what the framework needs from this
+substrate is (a) *determinism under restart* — batch(step) must be a pure
+function of the step index so checkpoint-resume replays identical data with
+no loader state to snapshot, (b) *device placement* — batches land already
+sharded over the mesh's batch axes, and (c) a learnable signal so examples
+show loss going down.
+
+Tokens follow a stationary order-k Markov chain derived from a hash mix of
+(seed, step, position) — cheap, reproducible, and compressible (so
+cross-entropy decreases measurably within a few hundred steps).  Images are
+class-conditional Gaussian blobs for the CNN examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import ShardingRules, named_sharding
+
+__all__ = ["DataPipeline", "make_pipeline", "synthetic_batch", "synthetic_images"]
+
+
+def _batch_key(seed: int, step: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def synthetic_batch(seed: int, step: int, batch: int, seq: int, vocab: int) -> jax.Array:
+    """(batch, seq) int32 tokens; a deterministic pure function of (seed, step).
+
+    Order-1 Markov structure: token_{t+1} = (a * token_t + noise) % vocab with
+    per-sequence offsets — enough mutual information for a 100M model to show
+    a clearly decreasing loss curve.
+    """
+    key = _batch_key(seed, step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    first = jax.random.randint(k1, (batch, 1), 0, vocab)
+    noise = jax.random.randint(k2, (batch, seq - 1), 0, max(2, vocab // 64))
+    mult = 31
+
+    def body(tok, n):
+        nxt = (tok * mult + n + 7) % vocab
+        return nxt, nxt
+
+    _, rest = jax.lax.scan(body, first[:, 0], noise.T)
+    return jnp.concatenate([first, rest.T], axis=1).astype(jnp.int32)
+
+
+def synthetic_images(seed: int, step: int, batch: int, hw: int, ch: int,
+                     n_classes: int):
+    """Class-conditional blobs: (images (B,H,W,C) in [-1,1], labels (B,))."""
+    key = _batch_key(seed, step)
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (batch,), 0, n_classes)
+    yy, xx = jnp.mgrid[0:hw, 0:hw].astype(jnp.float32) / hw
+    cy = (labels % 4).astype(jnp.float32) / 4.0 + 0.125
+    cx = ((labels // 4) % 4).astype(jnp.float32) / 4.0 + 0.125
+    d2 = (yy[None] - cy[:, None, None]) ** 2 + (xx[None] - cx[:, None, None]) ** 2
+    blob = jnp.exp(-d2 * (8.0 + (labels % 3))[:, None, None].astype(jnp.float32))
+    noise = 0.1 * jax.random.normal(k2, (batch, hw, hw, ch))
+    img = blob[..., None] * jnp.ones((ch,)) + noise
+    return (img * 2.0 - 1.0).astype(jnp.float32), labels.astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class DataPipeline:
+    """Sharded token pipeline for one (arch, shape) workload."""
+
+    seed: int
+    global_batch: int
+    seq_len: int
+    vocab: int
+    ctx_len: int = 0  # encdec/vlm context stub length (0 = none)
+    d_model: int = 0
+    mesh: Optional[object] = None
+    rules: Optional[ShardingRules] = None
+
+    def batch(self, step: int) -> dict:
+        out = {
+            "tokens": synthetic_batch(
+                self.seed, step, self.global_batch, self.seq_len, self.vocab
+            )
+        }
+        if self.ctx_len:
+            key = _batch_key(self.seed ^ 0x5EED, step)
+            out["ctx"] = (
+                jax.random.normal(key, (self.global_batch, self.ctx_len, self.d_model))
+                * 0.1
+            ).astype(jnp.float32)
+        if self.mesh is not None and self.rules is not None:
+            tok_sh = named_sharding(
+                self.mesh, self.rules, ("batch", None),
+                dim_sizes=out["tokens"].shape,
+            )
+            out["tokens"] = jax.device_put(out["tokens"], tok_sh)
+            if "ctx" in out:
+                ctx_sh = named_sharding(
+                    self.mesh, self.rules, ("batch", "ctx", None),
+                    dim_sizes=out["ctx"].shape,
+                )
+                out["ctx"] = jax.device_put(out["ctx"], ctx_sh)
+        return out
+
+
+def make_pipeline(cfg, shape, *, seed: int = 0, mesh=None, rules=None,
+                  global_batch: Optional[int] = None,
+                  seq_len: Optional[int] = None) -> DataPipeline:
+    ctx_len = 0
+    if cfg.family == "encdec":
+        ctx_len = cfg.n_frames
+    elif cfg.family == "vlm":
+        ctx_len = cfg.n_image_tokens
+    return DataPipeline(
+        seed=seed,
+        global_batch=global_batch or shape.global_batch,
+        seq_len=seq_len or shape.seq_len,
+        vocab=cfg.vocab,
+        ctx_len=ctx_len,
+        d_model=cfg.d_model,
+        mesh=mesh,
+        rules=rules,
+    )

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots the paper optimizes.
+
+- matmul_fp.py        the unified mu x tau compute unit, float path
+- matmul_q16.py       the paper's Q2.14 fixed-point path
+- conv2d.py           conv-as-GEMM on the same unit (paper Fig. 4)
+- flash_attention.py  streaming-softmax attention (prefill hot spot)
+- ops.py              public jit'd wrappers (GQA folding, fallbacks)
+- ref.py              pure-jnp oracles
+
+Kernels target TPU (pallas_call + BlockSpec, MXU-aligned tiles) and are
+validated with interpret=True on CPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

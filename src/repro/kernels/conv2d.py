@@ -1,0 +1,77 @@
+"""Direct convolution on the unified compute unit, as a Pallas kernel.
+
+The paper's key move is computing conv as vector multiplication on the same
+μ×τ unit used for FC layers (Fig. 4): for each spatial position and each of
+the K² taps, a μ-wide input-channel vector is dotted with a μ×τ weight slab.
+
+TPU adaptation: instead of one (spatial, tap) position per cycle, each grid
+step keeps an (H, W, Cin) image slab in VMEM and runs K² *matmuls* of shape
+(Ho·Wo, Cin) x (Cin, τ) — the tap loop is unrolled (K is static) and each tap
+is an MXU-shaped GEMM, which is how the μ×τ wave generalizes to a 128×128
+systolic array.  Accumulation lives in a f32 VMEM scratch across taps.
+
+Grid: (N, Cout/τ).  Stride-1 only — strided taps need non-block-aligned
+windows; strided convs (AlexNet conv1) take the im2col + matmul_fp path in
+``ops.conv2d`` (documented fallback, same unified-GEMM semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["conv2d_pallas"]
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh, kw, ho, wo):
+    # x_ref: (1, H, W, Cin) one padded image; w_ref: (kh*kw*Cin, tau)
+    # o_ref: (1, ho, wo, tau); acc_ref: (ho*wo, tau) f32
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    cin = x_ref.shape[3]
+    for i in range(kh):
+        for j in range(kw):
+            patch = x_ref[0, i : i + ho, j : j + wo, :]  # (ho, wo, cin)
+            lhs = patch.reshape(ho * wo, cin)
+            rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :]
+            acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    o_ref[...] = acc_ref[...].reshape(1, ho, wo, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+def conv2d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tau: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """NHWC stride-1 VALID conv.  x: (N,H,W,Cin), w: (K,K,Cin,Cout)."""
+    n, h, wdt, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    ho, wo = h - kh + 1, wdt - kw + 1
+    tau = min(tau, cout)
+    coutp = -(-cout // tau) * tau
+    if coutp != cout:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
+    # (kh*kw*cin, cout) with rows ordered (tap-major, cin-minor) to match the
+    # kernel's per-tap row slices.
+    wmat = w.reshape(kh * kw * cin, coutp)
+
+    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, ho=ho, wo=wo)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, coutp // tau),
+        in_specs=[
+            pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, tau), lambda b, t: (b, 0, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, coutp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ho * wo, tau), jnp.float32)],
+        interpret=interpret,
+    )(x, wmat)
+    return out[..., :cout]

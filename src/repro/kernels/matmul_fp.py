@@ -1,0 +1,91 @@
+"""The unified compute unit as a Pallas TPU kernel (float path).
+
+This is the TPU realization of the paper's μ×τ dot-product array: a tiled
+matmul where the BlockSpec tile (bm, bn, bk) plays the role of the paper's
+loop-tiling factors and Pallas's revolving VMEM windows provide the
+ping-pong double buffering (HBM->VMEM copies for grid step i+1 overlap the
+MXU work of step i).
+
+Grid layout: (m/bm, n/bn, k/bk) with the reduction axis innermost and marked
+"arbitrary" (sequential) so the f32 VMEM scratch accumulator carries across
+k-steps; m/n axes are "parallel".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tiling import MatmulBlock
+
+__all__ = ["matmul_fp_pallas"]
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write_back():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _compiler_params():
+    # grid axes: (m parallel, n parallel, k sequential/arbitrary)
+    params_cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if params_cls is None:  # pragma: no cover - very old jax
+        return None
+    return params_cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "out_dtype"))
+def matmul_fp_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block: MatmulBlock = MatmulBlock(256, 256, 256),
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """x: (m, k) @ w: (k, n) -> (m, n). Pads to block multiples internally."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    out_dtype = out_dtype or x.dtype
+
+    bm, bn, bk = block.bm, block.bn, block.bk
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kwargs = {}
+    cp = _compiler_params()
+    if cp is not None and not interpret:
+        kwargs["compiler_params"] = cp
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(x, w)
+    return out[:m, :n]

@@ -1,0 +1,82 @@
+"""The paper's 16-bit Q2.14 fixed-point compute unit as a Pallas kernel.
+
+int16 x int16 products accumulated in int32 (TPU-native accumulator width;
+the FPGA DSP48 cascade is 48-bit — difference documented in DESIGN.md §2),
+then a saturating round-shift write-back to Q(m).(n) int16, exactly matching
+``repro.core.quantization.qmatmul_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantization import QFormat, Q2_14
+from repro.core.tiling import MatmulBlock
+
+__all__ = ["matmul_q16_pallas"]
+
+
+def _qmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, frac_bits, raw_min, raw_max):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write_back():
+        acc = acc_ref[...]
+        rounding = jnp.int32(1 << (frac_bits - 1))
+        shifted = (acc + rounding) >> frac_bits
+        o_ref[...] = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+def matmul_q16_pallas(
+    xq: jax.Array,
+    wq: jax.Array,
+    *,
+    fmt: QFormat = Q2_14,
+    block: MatmulBlock = MatmulBlock(256, 256, 256),
+    interpret: bool = False,
+) -> jax.Array:
+    """xq: (m, k) int16 raw @ wq: (k, n) int16 raw -> (m, n) int16 raw."""
+    assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+
+    bm, bn, bk = block.bm, block.bn, block.bk
+    mp, np_, kp = -(-m // bm) * bm, -(-n // bn) * bn, -(-k // bk) * bk
+    if (mp, kp) != (m, k):
+        xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+
+    kernel = functools.partial(
+        _qmm_kernel,
+        frac_bits=fmt.frac_bits,
+        raw_min=fmt.raw_min,
+        raw_max=fmt.raw_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int16),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xq, wq)
+    return out[:m, :n]

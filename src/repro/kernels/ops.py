@@ -1,0 +1,117 @@
+"""jit'd public wrappers around the Pallas kernels, with shape handling,
+GQA folding, and documented fallbacks.
+
+These are the entry points the rest of the framework uses; ``ref.py`` holds
+the oracles each one is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QFormat, Q2_14
+from repro.core.tiling import MatmulBlock, clamp_block
+
+from . import ref
+from .conv2d import conv2d_pallas
+from .flash_attention import flash_attention_pallas
+from .matmul_fp import matmul_fp_pallas
+from .matmul_q16 import matmul_q16_pallas
+
+__all__ = ["matmul_fp", "matmul_q16", "conv2d", "flash_attention"]
+
+
+def matmul_fp(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block: MatmulBlock | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    n = w.shape[1]
+    block = clamp_block(m, n, k, block or MatmulBlock(256, 256, 256))
+    return matmul_fp_pallas(x, w, block=block, interpret=interpret)
+
+
+def matmul_q16(
+    xq: jax.Array,
+    wq: jax.Array,
+    *,
+    fmt: QFormat = Q2_14,
+    block: MatmulBlock | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = xq.shape
+    n = wq.shape[1]
+    block = clamp_block(m, n, k, block or MatmulBlock(256, 256, 256))
+    return matmul_q16_pallas(xq, wq, fmt=fmt, block=block, interpret=interpret)
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    tau: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """NHWC conv on the unified compute unit.
+
+    stride == 1: the direct Pallas conv kernel (taps unrolled over the MXU).
+    stride > 1: im2col + the Pallas matmul kernel — same unified-GEMM
+    semantics; strided taps are not block-aligned for the direct kernel
+    (DESIGN.md §2).
+    """
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    if stride == 1:
+        return conv2d_pallas(x, w, tau=tau, interpret=interpret)
+    n, h, wd, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ho = (h - kh) // stride + 1
+    wo = (wd - kw) // stride + 1
+    patches = jax.lax.conv_general_dilated_patches(
+        x.transpose(0, 3, 1, 2),
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding="VALID",
+    )  # (N, Cin*K*K, Ho, Wo)
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * ho * wo, cin * kh * kw)
+    wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
+    out = matmul_fp(cols, wmat, interpret=interpret)
+    return out.reshape(n, ho, wo, cout)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """GQA-aware attention.  q: (B, Hq, Sq, D), k/v: (B, Hkv, Sk, D).
+
+    The q-head group is folded into the query *rows* (not by repeating KV),
+    so each kv head streams its KV exactly once: q is reshaped to
+    (B*Hkv, G*Sq, D) with causal masking applied per original row index.
+    For G > 1 with causal masks this needs per-row offsets, so we instead
+    fold the group into the batch-head axis of q against *shared* kv blocks.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    # (B*Hkv*G, Sq, D) queries against (B*Hkv, Sk, D) kv, broadcast over G.
+    qf = q.reshape(b, hkv, g, sq, d).reshape(b * hkv * g, sq, d)
+    kf = jnp.broadcast_to(k[:, :, None], (b, hkv, g, sk, d)).reshape(b * hkv * g, sk, d)
+    vf = jnp.broadcast_to(v[:, :, None], (b, hkv, g, sk, d)).reshape(b * hkv * g, sk, d)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, q_offset=q_offset, bq=bq, bk=bk, interpret=interpret
+    )
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QFormat, Q2_14, qmatmul_ref as _qmatmul_core
+
+__all__ = ["matmul_ref", "matmul_q16_ref", "conv2d_ref", "attention_ref"]
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """f32-accumulated matmul, output in x.dtype."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_q16_ref(xq: jax.Array, wq: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """int16 raw x int16 raw -> int16 raw (int32 accumulate, saturating shift)."""
+    return _qmatmul_core(xq, wq, fmt)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0) -> jax.Array:
+    """NHWC conv oracle via lax.conv_general_dilated.
+
+    x: (N,H,W,Cin), w: (K,K,Cin,Cout).
+    """
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Dense softmax attention oracle.  q: (BH, Sq, D), k/v: (BH, Sk, D)."""
+    sq, sk = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        s = jnp.where(rows >= cols, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

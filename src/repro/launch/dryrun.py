@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k --mesh multi
+
+For each cell this builds the real step function (train_step for train
+shapes; prefill/decode serve steps otherwise), the NamedSharding trees from
+the logical-axis rules, lowers with ShapeDtypeStruct stand-ins (no
+allocation), compiles under the production mesh, and writes a JSON record
+(FLOPs, bytes, per-collective wire bytes, per-device memory) consumed by
+benchmarks/roofline_report.py.
+
+A compile failure here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the framework — the run exits nonzero.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, all_configs, get_config, shape_applicable
+from repro.core.hlo_analysis import analyze_hlo
+from repro.core.tiling import TPU_V5E
+from repro.launch.mesh import make_production_mesh, mesh_chips, mesh_name
+from repro.launch.steps import step_and_specs
+from repro.parallel.sharding import SERVE_RULES, TRAIN_RULES, use_mesh
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def rules_for(kind: str, cfg=None, overrides: dict | None = None):
+    rules = TRAIN_RULES if kind == "train" else SERVE_RULES
+    if cfg is not None and cfg.rule_overrides:
+        rules = rules.with_overrides(**dict(cfg.rule_overrides))
+    if cfg is not None and kind != "train" and cfg.serve_rule_overrides:
+        rules = rules.with_overrides(**dict(cfg.serve_rule_overrides))
+    if overrides:
+        rules = rules.with_overrides(**overrides)
+    return rules
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             accum: int = 1, rule_overrides: dict | None = None,
+             tag: str = "", pad_heads: int = 0,
+             remat_policy: str | None = None) -> dict:
+    cfg = get_config(arch)
+    import dataclasses as _dc
+    if pad_heads:
+        cfg = _dc.replace(cfg, n_heads_padded=pad_heads)
+    if remat_policy is not None:
+        cfg = _dc.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(shape.kind, cfg, rule_overrides)
+    if accum == 0:
+        accum = cfg.train_accum if shape.kind == "train" else 1
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name(mesh),
+        "chips": mesh_chips(mesh),
+        "kind": shape.kind,
+        "accum": accum,
+        "tag": tag,
+    }
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        cell = step_and_specs(cfg, shape, mesh, rules, accum=accum)
+        jitted = jax.jit(
+            cell.step_fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    record["lower_s"] = round(t_lower - t0, 2)
+    record["compile_s"] = round(t_compile - t_lower, 2)
+    # ---- memory (proves it fits) ----
+    memd = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            memd[k] = int(v)
+    args_b = memd.get("argument_size_in_bytes", 0)
+    alias_b = memd.get("alias_size_in_bytes", 0)
+    out_b = memd.get("output_size_in_bytes", 0)
+    tmp_b = memd.get("temp_size_in_bytes", 0)
+    memd["per_device_total_bytes"] = args_b + tmp_b + max(out_b - alias_b, 0)
+    record["memory"] = memd
+
+    # ---- cost (FLOPs / bytes for the roofline) ----
+    cost = dict(cost or {})
+    record["cost"] = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+    }
+
+    # ---- trip-count-aware HLO analysis (flops/bytes/collectives) ----
+    # XLA's cost_analysis counts while bodies once; analyze_hlo multiplies by
+    # known_trip_count so scanned layers are attributed correctly.
+    st = analyze_hlo(hlo, total_devices=record["chips"])
+    record["hlo"] = {
+        "flops": st.flops,
+        "bytes": st.bytes,
+        "wire_bytes": st.wire_bytes,
+        "coll_counts": st.coll_counts,
+        "coll_static_counts": st.coll_static_counts,
+        "coll_bytes": {k: round(v) for k, v in st.coll_bytes.items()},
+        "top_dots": st.top_dots,
+        "top_colls": st.top_colls,
+    }
+    record["hlo_lines"] = hlo.count("\n")
+
+    # ---- roofline terms ----
+    spec = TPU_V5E
+    flops = st.flops
+    byts = st.bytes
+    record["roofline"] = {
+        "compute_s": flops / spec.peak_bf16_flops,
+        "memory_s": byts / spec.hbm_bw,
+        "collective_s": st.wire_bytes / spec.ici_bw,
+    }
+    terms = record["roofline"]
+    record["roofline"]["dominant"] = max(terms, key=lambda k: terms[k])
+    n_active = cfg.n_params_active()
+    tokens = shape.tokens
+    mf = (6.0 if shape.kind == "train" else 2.0) * n_active * tokens
+    total_flops = flops * record["chips"]
+    record["model_flops"] = mf
+    record["useful_ratio"] = mf / total_flops if total_flops else 0.0
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    record["roofline_fraction"] = (
+        (terms["compute_s"] / bound) * record["useful_ratio"] if bound else 0.0
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fname = f"{arch.replace('/', '_')}_{shape_name}_{record['mesh']}{suffix}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def iter_cells(archs, shapes):
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            yield arch, shape_name, shape_applicable(cfg, SHAPES[shape_name])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="shape name (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--out", default=os.environ.get("DRYRUN_OUT", "experiments/dryrun"))
+    ap.add_argument("--accum", type=int, default=0,
+                    help="gradient accumulation (0 = per-arch default)")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="pad q-heads to this count for TP alignment")
+    ap.add_argument("--remat-policy", default=None,
+                    help="override cfg.remat_policy (e.g. attn_out)")
+    ap.add_argument("--tag", default="", help="suffix for experiment variants")
+    ap.add_argument("--override", action="append", default=[],
+                    help="sharding rule override logical=axis (axis may be "
+                         "'none' or comma-joined mesh axes)")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else sorted(all_configs())
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        if v.lower() in ("none", ""):
+            overrides[k] = None
+        elif "," in v:
+            overrides[k] = tuple(v.split(","))
+        else:
+            overrides[k] = v
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_label = "2x16x16" if multi else "16x16"
+                head = f"[{arch} x {shape_name} x {mesh_label}]"
+                try:
+                    rec = run_cell(arch, shape_name, multi, args.out,
+                                   accum=args.accum,
+                                   rule_overrides=overrides or None,
+                                   tag=args.tag, pad_heads=args.pad_heads,
+                                   remat_policy=args.remat_policy)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    failures.append((arch, shape_name, mesh_label, repr(e)))
+                    print(f"{head} FAILED: {e}", flush=True)
+                    continue
+                if "skipped" in rec:
+                    print(f"{head} SKIP: {rec['skipped']}", flush=True)
+                    continue
+                r = rec["roofline"]
+                print(
+                    f"{head} ok kind={rec['kind']} "
+                    f"compile={rec['compile_s']}s "
+                    f"mem/dev={rec['memory'].get('per_device_total_bytes', 0)/2**30:.2f}GiB "
+                    f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                    f"collective={r['collective_s']:.3e}s dominant={r['dominant']} "
+                    f"useful={rec['useful_ratio']:.2f} "
+                    f"roofline_frac={rec['roofline_fraction']:.3f}",
+                    flush=True,
+                )
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        sys.exit(1)
+    print("\nall requested dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

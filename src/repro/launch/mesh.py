@@ -1,0 +1,44 @@
+"""Production meshes.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
+jax device query, and smoke tests must keep seeing one device.
+
+Topology (TPU v5e):
+  * single pod: (16, 16)  axes ("data", "model")          = 256 chips
+  * multi-pod:  (2, 16, 16) axes ("pod", "data", "model") = 512 chips
+
+"model" maps to the intra-pod ICI dimension with the densest wiring (TP and
+EP collectives are latency-bound); "data"/"pod" carry the FSDP/DP collectives
+(bandwidth-bound all-gather / reduce-scatter, DCN-tolerant across pods).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_name", "mesh_chips"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(*, multi_pod: bool = False):
+    """Shrunken topology for CI-scale dry-run tests (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n

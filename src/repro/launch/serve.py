@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --prompts 4 \
+        --prompt-len 32 --gen 16
+
+Reduced configs run end-to-end on CPU; full configs are exercised by the
+dry-run (prefill_32k / decode_32k / long_500k cells compile the exact same
+step functions under the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core.template import default_template
+from repro.data.pipeline import synthetic_batch
+from repro.models import transformer as T
+
+
+def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
+             greedy=True, tpl=None):
+    """Prefill + autoregressive decode.  tokens: (B, S) prompts."""
+    tpl = tpl or default_template()
+    b, s = tokens.shape
+    cache_len = cache_len or (s + gen)
+
+    prefill = jax.jit(lambda p, tk, cx: T.prefill(tpl, cfg, p, tk, ctx=cx,
+                                                  cache_len=cache_len))
+    decode = jax.jit(lambda p, tok, t, c: T.decode_step(tpl, cfg, p, tok, t, c))
+
+    logits, cache = prefill(params, tokens, ctx)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out.append(tok)
+    for i in range(gen - 1):
+        logits, cache = decode(params, tok, jnp.int32(s + i), cache)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--prompts", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced(get_config(args.arch))
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
+    tokens = synthetic_batch(args.seed, 0, args.prompts, args.prompt_len, cfg.vocab)
+    ctx = None
+    if cfg.family == "encdec":
+        ctx = jax.random.normal(
+            jax.random.PRNGKey(1), (args.prompts, cfg.n_frames, cfg.d_model)
+        ) * 0.1
+    elif cfg.family == "vlm":
+        ctx = jax.random.normal(
+            jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
+        ) * 0.1
+
+    t0 = time.time()
+    gen = generate(cfg, params, tokens, ctx, gen=args.gen)
+    dt = time.time() - t0
+    print(f"[serve] arch={cfg.name} batch={args.prompts} "
+          f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
+          f"in {dt:.2f}s ({args.prompts * args.gen / dt:.1f} tok/s)")
+    print("[serve] sample generations:")
+    for row in gen[: min(2, args.prompts)]:
+        print("   ", row.tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

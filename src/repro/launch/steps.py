@@ -1,0 +1,261 @@
+"""Step functions + abstract input/state specs — shared by the dry-run,
+the training driver, and the serving driver.
+
+Everything here is mesh-agnostic: callers pick a mesh + rule table and get
+back (step_fn, abstract inputs, NamedSharding trees) ready for
+``jax.jit(step_fn, in_shardings=..., out_shardings=..., donate_argnums=...)
+.lower(...).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.template import Template, default_template
+from repro.models import transformer as T
+from repro.optim import AdamW, OptState, adamw_init, adamw_update, cosine_warmup
+from repro.parallel.sharding import (
+    ShardingRules,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "input_specs",
+    "abstract_params",
+    "abstract_opt_state",
+    "abstract_cache",
+    "state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "step_and_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# abstract shapes (ShapeDtypeStruct stand-ins — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _ctx_spec(cfg: ArchConfig, batch: int):
+    if cfg.family == "encdec":
+        return jax.ShapeDtypeStruct((batch, cfg.n_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill: {tokens [, labels] [, ctx]};  decode: {token, t}.
+    """
+    b = shape.global_batch
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "t": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    specs = {"tokens": jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+    ctx = _ctx_spec(cfg, b)
+    if ctx is not None:
+        specs["ctx"] = ctx
+    return specs
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(cfg: ArchConfig):
+    return jax.eval_shape(lambda: adamw_init(abstract_params(cfg)))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+
+def state_shardings(cfg: ArchConfig, mesh, rules: ShardingRules):
+    """(param_shardings, opt_shardings) NamedSharding trees."""
+    p_shapes = abstract_params(cfg)
+    p_axes = T.param_axes(cfg)
+    p_sh = tree_shardings(mesh, rules, p_shapes, p_axes)
+    o_shapes = abstract_opt_state(cfg)
+    o_axes = OptState(step=None, m=p_axes, v=p_axes)
+    o_sh = tree_shardings(mesh, rules, o_shapes, o_axes)
+    return p_sh, o_sh
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeSpec, mesh, rules: ShardingRules):
+    specs = input_specs(cfg, shape)
+    axes = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels", "token"):
+            axes[k] = ("batch", None)
+        elif k == "ctx":
+            axes[k] = ("batch", "ctx", None)
+        else:  # scalar t
+            axes[k] = None
+    return tree_shardings(mesh, rules, specs, axes)
+
+
+def cache_shardings(cfg: ArchConfig, cache_shapes, mesh, rules: ShardingRules):
+    axes = T.cache_axes(cfg, cache_shapes)
+    return tree_shardings(mesh, rules, cache_shapes, axes)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def default_optimizer(total_steps: int = 10000) -> AdamW:
+    return AdamW(lr=cosine_warmup(3e-4, min(2000, total_steps // 10 + 1), total_steps))
+
+
+def make_train_step(cfg: ArchConfig, tpl: Optional[Template] = None,
+                    opt: Optional[AdamW] = None, accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum`` > 1 splits the global batch into microbatches under lax.scan
+    and accumulates grads in f32 (activation-memory knob for the big cells).
+    """
+    tpl = tpl or default_template()
+    opt = opt or default_optimizer()
+
+    def loss(params, batch):
+        return T.loss_fn(tpl, cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb(carry, mbatch):
+                gsum, lsum, auxsum = carry
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, mbatch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l, auxsum + m["aux"]), None
+
+            (gsum, lsum, auxsum), _ = jax.lax.scan(
+                mb, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda gg: (gg / accum), gsum)
+            l = lsum / accum
+            metrics = {"ce": l, "aux": auxsum / accum}
+        new_params, new_opt, om = adamw_update(opt, grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om, "loss": l}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, tpl: Optional[Template] = None,
+                      cache_len: Optional[int] = None):
+    """(params, batch) -> (last-pos logits, filled decode cache)."""
+    tpl = tpl or default_template()
+
+    def prefill_step(params, batch):
+        return T.prefill(
+            tpl, cfg, params, batch["tokens"], ctx=batch.get("ctx"),
+            cache_len=cache_len,
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, tpl: Optional[Template] = None):
+    """(params, cache, batch{token, t}) -> (logits, new cache)."""
+    tpl = tpl or default_template()
+
+    def decode_step(params, cache, batch):
+        return T.decode_step(tpl, cfg, params, batch["token"], batch["t"], cache)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# one-call assembly for a dry-run cell
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    step_fn: object
+    args: tuple  # abstract args, in order
+    in_shardings: tuple
+    out_shardings: object
+    donate_argnums: tuple
+    kind: str
+
+
+def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                   rules: ShardingRules, accum: int = 1) -> CellSpec:
+    """Build the jit-ready (fn, abstract args, shardings) for one cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    repl = NamedSharding(mesh, P())
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(cfg, shape, mesh, rules)
+    p_shapes = abstract_params(cfg)
+    p_sh, o_sh = state_shardings(cfg, mesh, rules)
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, accum=accum)
+        o_shapes = abstract_opt_state(cfg)
+        metrics_sh = None  # replicated outputs
+        return CellSpec(
+            step_fn=fn,
+            args=(p_shapes, o_shapes, specs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, jax.tree.map(lambda _: repl, {
+                "ce": 0, "aux": 0, "grad_norm": 0, "lr": 0, "loss": 0})),
+            donate_argnums=(0, 1),
+            kind="train",
+        )
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, cache_len=shape.seq_len)
+        c_shapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(cfg, c_shapes, mesh, rules)
+        logits_sh = None
+        return CellSpec(
+            step_fn=fn,
+            args=(p_shapes, specs),
+            in_shardings=(p_sh, b_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(),
+            kind="prefill",
+        )
+    # decode
+    fn = make_decode_step(cfg)
+    c_shapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cfg, c_shapes, mesh, rules)
+    return CellSpec(
+        step_fn=fn,
+        args=(p_shapes, c_shapes, specs),
+        in_shardings=(p_sh, c_sh, b_sh),
+        out_shardings=(None, c_sh),
+        donate_argnums=(1,),
+        kind="decode",
+    )

@@ -1,0 +1,13 @@
+"""Model substrate: shared layers + the unified TransformerLM + CNN zoo.
+
+- layers.py       norms, RoPE, MLP, losses
+- attention.py    GQA/cross/windowed attention, ring-buffer KV cache
+- moe.py          grouped capacity-based mixture-of-experts
+- ssm.py          Mamba2 SSD (chunked scan + recurrent decode)
+- rglru.py        RG-LRU recurrent block (RecurrentGemma)
+- transformer.py  the one model definition covering all assigned families
+- cnn.py          the paper's own AlexNet/VGG16/LeNet on the compute unit
+"""
+from . import attention, cnn, layers, moe, rglru, ssm, transformer
+
+__all__ = ["attention", "cnn", "layers", "moe", "rglru", "ssm", "transformer"]

@@ -1,0 +1,431 @@
+"""Attention: GQA/MHA, causal/sliding-window/cross, KV-cache prefill+decode.
+
+Projections route through the Template compute unit; the attention math
+itself runs on the XLA plane (GSPMD shards it) with two strategies:
+
+* dense  — full (B,H,S,T) scores; used when S*T is small.
+* chunked — memory-efficient online-softmax over (q-chunk, k-chunk) pairs
+  under two nested ``lax.scan``s (the XLA-plane analogue of the Pallas flash
+  kernel; the kernel itself is the TPU-target artifact in kernels/).
+  Baseline computes all chunk pairs with masking; the causal-waste is
+  attacked in the §Perf hillclimb.
+
+Cache layout per layer: {"k","v": (B, Hkv, C, D), "pos": (C,) int32} — a ring
+buffer (slot = pos % C) so sliding-window layers carry only window-sized
+caches (the long_500k cell for hybrid archs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import Template
+from repro.parallel.sharding import constrain
+
+from .layers import apply_rope, init_dense, dense
+
+__all__ = [
+    "init_attention",
+    "attention_axes",
+    "attention",
+    "decode_attention",
+    "init_layer_cache",
+    "CHUNKED_THRESHOLD",
+]
+
+_NEG = -1e30
+#: use the chunked path when key length reaches this (4096: even train_4k
+#: must not materialize (B,H,S,S) scores — 15 GiB/device at B_local=16)
+CHUNKED_THRESHOLD = 4096
+_BQ, _BK = 1024, 1024
+
+
+def init_attention(key, cfg, *, d_model=None, n_heads=None, n_kv=None,
+                   head_dim=None, bias=None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    h = n_heads or cfg.eff_heads
+    kv = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.head_dim
+    bias = cfg.qkv_bias if bias is None else bias
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d, h * hd, bias=bias, dtype=dtype),
+        "wk": init_dense(ks[1], d, kv * hd, bias=bias, dtype=dtype),
+        "wv": init_dense(ks[2], d, kv * hd, bias=bias, dtype=dtype),
+        "wo": init_dense(ks[3], h * hd, d, dtype=dtype, scale=(h * hd) ** -0.5),
+    }
+
+
+def attention_axes(cfg, bias=None) -> dict:
+    bias = cfg.qkv_bias if bias is None else bias
+    ax = {
+        "wq": {"w": ("embed", "qkv")},
+        "wk": {"w": ("embed", "qkv")},
+        "wv": {"w": ("embed", "qkv")},
+        "wo": {"w": ("qkv", "embed")},
+    }
+    if bias:
+        for k in ("wq", "wk", "wv"):
+            ax[k]["b"] = ("qkv",)
+    return ax
+
+
+def init_layer_cache(batch: int, n_kv: int, cache_len: int, head_dim: int, dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, n_kv, cache_len, head_dim), dtype),
+        "v": jnp.zeros((batch, n_kv, cache_len, head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+# ---------------------------------------------------------------------------
+# score/value math
+# ---------------------------------------------------------------------------
+
+
+def _sdpa_dense(q, k, v, mask) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,T,Hkv,D); mask: (B,1,S,T) or None -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / (d ** 0.5)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, _NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def _sdpa_folded(qc, kc, vc, *, t: int, bq: int, bk: int, scale: float):
+    """Causal attention over the lower triangle only, statically.
+
+    Fold q-chunks (r, n-1-r): row r processes q-chunk r for k-chunks 0..r and
+    q-chunk n-1-r for k-chunks 0..n-1-r — (n+1) single-tile steps per folded
+    row, n/2 rows => n(n+1)/2 tiles instead of the n^2 masked rectangle.
+    This is the flash-attention causal schedule expressed in XLA (§Perf C).
+
+    qc/kc/vc: (n, B, bq|bk, H, D) with n even.  Returns (n, B, bq, H, D).
+    """
+    n, b, _, h, d = qc.shape
+    half = n // 2
+    qa = qc[:half]  # row r -> q-chunk r
+    qb = qc[::-1][:half]  # row r -> q-chunk n-1-r
+
+    def row_body(_, xs):
+        r, qA, qB = xs  # (B,bq,H,D) each
+
+        @jax.checkpoint
+        def k_body(state, j):
+            mA, lA, aA, mB, lB, aB = state
+            is_a = j <= r
+            kidx = jnp.where(is_a, j, j - (r + 1))
+            kblk = jnp.take(kc, kidx, axis=0)  # (B,bk,H,D)
+            vblk = jnp.take(vc, kidx, axis=0)
+            qblk = jnp.where(is_a, qA, qB)
+            row_chunk = jnp.where(is_a, r, n - 1 - r)
+            rows = row_chunk * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = kidx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            srt = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk.astype(jnp.float32), kblk.astype(jnp.float32)
+            ) * scale
+            valid = (rows >= cols) & (cols < t)
+            srt = jnp.where(valid[None, None], srt, _NEG)
+            m_prev = jnp.where(is_a, mA, mB)
+            l_prev = jnp.where(is_a, lA, lB)
+            a_prev = jnp.where(is_a, aA, aB)
+            m_new = jnp.maximum(m_prev, srt.max(-1))
+            p = jnp.exp(srt - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1)
+            a_new = a_prev * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+            )
+            mA2 = jnp.where(is_a, m_new, mA)
+            lA2 = jnp.where(is_a, l_new, lA)
+            aA2 = jnp.where(is_a, a_new, aA)
+            mB2 = jnp.where(is_a, mB, m_new)
+            lB2 = jnp.where(is_a, lB, l_new)
+            aB2 = jnp.where(is_a, aB, a_new)
+            return (mA2, lA2, aA2, mB2, lB2, aB2), None
+
+        z3 = jnp.full((b, h, bq), _NEG, jnp.float32)
+        z0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, d), jnp.float32)
+        (mA, lA, aA, mB, lB, aB), _ = jax.lax.scan(
+            k_body, (z3, z0, a0, z3, z0, a0), jnp.arange(n + 1)
+        )
+        outA = aA / jnp.maximum(lA[..., None], 1e-30)
+        outB = aB / jnp.maximum(lB[..., None], 1e-30)
+        return None, (jnp.moveaxis(outA, 2, 1), jnp.moveaxis(outB, 2, 1))
+
+    _, (outsA, outsB) = jax.lax.scan(
+        jax.checkpoint(row_body), None, (jnp.arange(half), qa, qb)
+    )
+    # rows 0..half-1 from A; rows n-1..half (reversed) from B
+    return jnp.concatenate([outsA, outsB[::-1]], axis=0)
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: int, q_offset: int,
+                  bq: int = _BQ, bk: int = _BK) -> jax.Array:
+    """Online-softmax attention over chunk pairs; memory O(bq*bk) per head.
+
+    q: (B,S,H,D); k/v: (B,T,Hkv,D).  Rows are global positions q_offset+i;
+    cols are 0..T-1.  Pure-causal self-attention takes the folded triangular
+    schedule (~2x fewer chunk GEMMs); other cases the masked rectangle.
+    """
+    b, s, h, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if g > 1:
+        # GQA: replicate KV to flat heads so the head dim (40, 64, ...) is
+        # shardable over 16-way TP.  The (hkv, g) factored layout replicates
+        # attention over every chip (both 8 and 5 < 16); flat heads shard.
+        # The extra KV reads are O(S*Hkv*D*g) — noise next to the p-matrix.
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = constrain(q, "batch", None, "act_heads", None)
+    k = constrain(k, "batch", None, "act_heads", None)
+    v = constrain(v, "batch", None, "act_heads", None)
+    bq = min(bq, s)
+    bk = min(bk, t)
+    sp, tp = -(-s // bq) * bq, -(-t // bk) * bk
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    nq, nk = sp // bq, tp // bk
+    scale = 1.0 / (d ** 0.5)
+
+    use_folded = (
+        causal and not window and q_offset == 0 and s == t
+        and bq == bk and nq == nk and nq >= 2 and nq % 2 == 0
+    )
+    qc = jnp.moveaxis(qp.reshape(b, nq, bq, h, d), 1, 0)  # (nq,B,bq,H,D)
+    kc = jnp.moveaxis(kp.reshape(b, nk, bk, h, d), 1, 0)  # (nk,B,bk,H,D)
+    vc = jnp.moveaxis(vp.reshape(b, nk, bk, h, d), 1, 0)
+
+    if use_folded:
+        outs = _sdpa_folded(qc, kc, vc, t=t, bq=bq, bk=bk, scale=scale)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, h, d)[:, :s]
+        return out.astype(q.dtype)
+
+    def q_body(_, qi_and_q):
+        qi, qblk = qi_and_q  # qblk: (B,bq,H,D)
+        rows = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+        @jax.checkpoint
+        def k_body(state, ki_and_kv):
+            m, l, acc = state
+            ki, kblk, vblk = ki_and_kv
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            srt = jnp.einsum(
+                "bqhd,bkhd->bhqk", qblk.astype(jnp.float32), kblk.astype(jnp.float32)
+            ) * scale  # (B,H,bq,bk)
+            valid = cols < t
+            if causal:
+                valid &= rows >= cols
+                if window:
+                    valid &= (rows - cols) < window
+            srt = jnp.where(valid[None, None], srt, _NEG)
+            m_new = jnp.maximum(m, srt.max(-1))
+            p = jnp.exp(srt - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, bq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_body, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,H,bq,D)
+        return None, jnp.moveaxis(out, 2, 1)  # (B,bq,H,D)
+
+    # checkpoint both scan bodies: backward recomputes scores per chunk pair
+    # (flash-attention backward) instead of storing (bq, bk) probabilities
+    # for every pair — O(S*D) residuals instead of O(S^2).
+    _, outs = jax.lax.scan(jax.checkpoint(q_body), None, (jnp.arange(nq), qc))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, h, d)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    tpl: Template,
+    p,
+    x: jax.Array,
+    *,
+    cfg,
+    positions: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    kv_source: Optional[jax.Array] = None,
+    n_heads: Optional[int] = None,
+    n_kv: Optional[int] = None,
+    head_dim: Optional[int] = None,
+    use_rope: Optional[bool] = None,
+    cache_len: int = 0,
+):
+    """Full-sequence attention.  x: (B, S, d).
+
+    - self-attention: kv_source is None
+    - cross-attention: kv_source = encoder states / image embeds
+    - ``cache_len > 0`` (prefill): additionally returns the filled ring-buffer
+      cache {"k","v","pos"} for decode continuation.
+    Returns (out, cache_or_None).
+    """
+    h = n_heads or cfg.eff_heads
+    kvh = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.head_dim
+    rope = cfg.use_rope if use_rope is None else use_rope
+
+    q = _split_heads(dense(tpl, p["wq"], x), h)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "act_heads", None)
+
+    src = x if kv_source is None else kv_source
+    k = _split_heads(dense(tpl, p["wk"], src), kvh)
+    v = _split_heads(dense(tpl, p["wv"], src), kvh)
+    if rope and kv_source is None:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    sq, st = q.shape[1], k.shape[1]
+    is_causal = causal and kv_source is None
+    if st >= CHUNKED_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, causal=is_causal, window=window, q_offset=0)
+    else:
+        if is_causal:
+            rows = jnp.arange(sq)[:, None]
+            cols = jnp.arange(st)[None, :]
+            m = rows >= cols
+            if window:
+                m &= (rows - cols) < window
+            mask = jnp.broadcast_to(m[None, None], (x.shape[0], 1, sq, st))
+        else:
+            mask = None
+        out = _sdpa_dense(q, k, v, mask)
+
+    out = constrain(out, "batch", None, "act_heads", None)
+    out = dense(tpl, p["wo"], out.reshape(x.shape[0], x.shape[1], h * hd))
+
+    cache = None
+    if cache_len:
+        # self-attention caches query positions; cross-attention caches the
+        # (static) context positions 0..T-1
+        fill_pos = positions if kv_source is None else jnp.arange(st)
+        cache = _fill_cache(k, v, fill_pos, cache_len if kv_source is None else st)
+    return out, cache
+
+
+def _fill_cache(k: jax.Array, v: jax.Array, positions: jax.Array, cache_len: int) -> dict:
+    """Pack rotated k/v (B,S,Hkv,D) into a ring cache of ``cache_len`` slots.
+
+    Ring invariant: slot = pos % cache_len.  Keeps the *last* cache_len
+    positions; assumes positions are contiguous 0..S-1 (prefill).
+    """
+    b, s, hkv, d = k.shape
+    kt = k.transpose(0, 2, 1, 3)  # (B,Hkv,S,D)
+    vt = v.transpose(0, 2, 1, 3)
+    pos = jnp.broadcast_to(
+        positions if positions.ndim == 1 else positions[0], (s,)
+    ).astype(jnp.int32)
+    if s < cache_len:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, cache_len - s), (0, 0)))
+        pos = jnp.pad(pos, (0, cache_len - s), constant_values=-1)
+        return {"k": kt, "v": vt, "pos": pos}
+    # keep last cache_len entries, rolled so slot = pos % cache_len
+    kt = kt[:, :, s - cache_len :]
+    vt = vt[:, :, s - cache_len :]
+    pos = pos[s - cache_len :]
+    shift = (s % cache_len + cache_len) % cache_len
+    kt = jnp.roll(kt, shift, axis=2)
+    vt = jnp.roll(vt, shift, axis=2)
+    pos = jnp.roll(pos, shift)
+    return {"k": kt, "v": vt, "pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, ring cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    tpl: Template,
+    p,
+    x: jax.Array,
+    cache: dict,
+    *,
+    cfg,
+    t: jax.Array,
+    window: int = 0,
+    cross: bool = False,
+    n_heads: Optional[int] = None,
+    n_kv: Optional[int] = None,
+    head_dim: Optional[int] = None,
+    use_rope: Optional[bool] = None,
+):
+    """One decode step.  x: (B, 1, d); t: scalar int32 current position.
+
+    Self-attention (cross=False) appends the new kv at slot t % C and masks
+    by stored positions; cross-attention reads a static cache (no update).
+    Returns (out, new_cache).
+    """
+    h = n_heads or cfg.eff_heads
+    kvh = n_kv or cfg.n_kv_heads
+    hd = head_dim or cfg.head_dim
+    rope = (cfg.use_rope if use_rope is None else use_rope) and not cross
+
+    tpos = jnp.asarray(t, jnp.int32).reshape(())
+    q = _split_heads(dense(tpl, p["wq"], x), h)
+    if rope:
+        q = apply_rope(q, tpos[None], cfg.rope_theta)
+
+    if cross:
+        k, v = cache["k"], cache["v"]  # (B,Hkv,T,D) static
+        valid = cache["pos"] >= 0
+        new_cache = cache
+    else:
+        c = cache["k"].shape[2]
+        slot = (tpos % c).astype(jnp.int32)
+        k_new = _split_heads(dense(tpl, p["wk"], x), kvh)
+        v_new = _split_heads(dense(tpl, p["wv"], x), kvh)
+        if rope:
+            k_new = apply_rope(k_new, tpos[None], cfg.rope_theta)
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+            (0, 0, slot, 0),
+        )
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+            (0, 0, slot, 0),
+        )
+        pos = jax.lax.dynamic_update_slice(cache["pos"], tpos[None], (slot,))
+        new_cache = {"k": k, "v": v, "pos": pos}
+        valid = (pos >= 0) & (pos <= tpos)
+        if window:
+            valid &= pos > tpos - window
+
+    mask = jnp.broadcast_to(valid[None, None, None, :], (x.shape[0], 1, 1, k.shape[2]))
+    out = _sdpa_dense(q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), mask)
+    out = dense(tpl, p["wo"], out.reshape(x.shape[0], 1, h * hd))
+    return out, new_cache

@@ -1,0 +1,133 @@
+"""The paper's own case-study networks (AlexNet / VGG16 / LeNet) built on the
+unified compute unit.
+
+Per the paper's HW/SW partitioning: conv + FC layers run on the "PL plane"
+(the Template compute unit — im2col GEMM / Pallas kernels / Q2.14 fixed
+point), while pooling, ReLU placement, flatten and softmax are "PS plane"
+XLA ops.  ``quantized=True`` inference reproduces the deployed numerics:
+weights and activations fake- or fully-quantized to Q2.14 around every GEMM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import Q2_14, QFormat, fake_quant_fmt
+from repro.core.template import Template
+
+__all__ = ["CNNSpec", "ALEXNET", "VGG16", "LENET", "CNN_ZOO", "init_cnn", "cnn_forward"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNSpec:
+    name: str
+    input_hw: int
+    input_ch: int
+    n_classes: int
+    # conv stages: (out_ch, k, stride, pad, pool) — pool is maxpool window (0 = none)
+    convs: tuple
+    # fc widths (excluding the final classifier)
+    fcs: tuple
+
+
+ALEXNET = CNNSpec(
+    "alexnet", 224, 3, 1000,
+    convs=(
+        (64, 11, 4, 2, 3),
+        (192, 5, 1, 2, 3),
+        (384, 3, 1, 1, 0),
+        (256, 3, 1, 1, 0),
+        (256, 3, 1, 1, 3),
+    ),
+    fcs=(4096, 4096),
+)
+
+VGG16 = CNNSpec(
+    "vgg16", 224, 3, 1000,
+    convs=(
+        (64, 3, 1, 1, 0), (64, 3, 1, 1, 2),
+        (128, 3, 1, 1, 0), (128, 3, 1, 1, 2),
+        (256, 3, 1, 1, 0), (256, 3, 1, 1, 0), (256, 3, 1, 1, 2),
+        (512, 3, 1, 1, 0), (512, 3, 1, 1, 0), (512, 3, 1, 1, 2),
+        (512, 3, 1, 1, 0), (512, 3, 1, 1, 0), (512, 3, 1, 1, 2),
+    ),
+    fcs=(4096, 4096),
+)
+
+LENET = CNNSpec(
+    "lenet", 32, 1, 10,
+    convs=((6, 5, 1, 0, 2), (16, 5, 1, 0, 2)),
+    fcs=(120, 84),
+)
+
+CNN_ZOO = {c.name: c for c in (ALEXNET, VGG16, LENET)}
+
+
+def _maxpool(x: jax.Array, w: int) -> jax.Array:
+    """NHWC max pool, window w, stride w (PS-plane op)."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, w, w, 1), (1, w, w, 1), "VALID"
+    )
+
+
+def init_cnn(key, spec: CNNSpec, dtype=jnp.float32, scale: float = 0.5):
+    """He-style init, scaled into the Q2.14 representable range [-2, 2)."""
+    params = {"convs": [], "fcs": []}
+    ch = spec.input_ch
+    hw = spec.input_hw
+    keys = jax.random.split(key, len(spec.convs) + len(spec.fcs) + 1)
+    ki = 0
+    for (cout, k, stride, pad, pool) in spec.convs:
+        fan_in = k * k * ch
+        w = jax.random.normal(keys[ki], (k, k, ch, cout)) * (scale * fan_in ** -0.5)
+        b = jnp.zeros((cout,))
+        params["convs"].append({"w": w.astype(dtype), "b": b.astype(dtype)})
+        ki += 1
+        hw = (hw + 2 * pad - k) // stride + 1
+        if pool:
+            hw //= pool
+        ch = cout
+    feat = hw * hw * ch
+    widths = (*spec.fcs, spec.n_classes)
+    fan = feat
+    for wd in widths:
+        w = jax.random.normal(keys[ki], (fan, wd)) * (scale * fan ** -0.5)
+        b = jnp.zeros((wd,))
+        params["fcs"].append({"w": w.astype(dtype), "b": b.astype(dtype)})
+        ki += 1
+        fan = wd
+    return params
+
+
+def cnn_forward(
+    tpl: Template,
+    spec: CNNSpec,
+    params,
+    x: jax.Array,
+    *,
+    quantized: bool = False,
+    fmt: QFormat = Q2_14,
+) -> jax.Array:
+    """x: (N, H, W, C) -> logits (N, n_classes).
+
+    ``quantized``: Q2.14 both weights and activations around every GEMM
+    (the deployed fixed-point numerics); the GEMM itself runs on whatever
+    backend ``tpl`` selects (XLA / Pallas float / Pallas q16).
+    """
+    fq = (lambda a: fake_quant_fmt(a, fmt)) if quantized else (lambda a: a)
+    h = fq(x)
+    for p, (cout, k, stride, pad, pool) in zip(params["convs"], spec.convs):
+        h = tpl.conv2d(h, fq(p["w"]), stride=stride, padding=pad)
+        h = jax.nn.relu(h + fq(p["b"]))
+        h = fq(h)
+        if pool:
+            h = _maxpool(h, pool)
+    h = h.reshape(h.shape[0], -1)
+    for i, p in enumerate(params["fcs"]):
+        h = tpl.linear(h, fq(p["w"]), fq(p["b"]))
+        if i < len(params["fcs"]) - 1:
+            h = fq(jax.nn.relu(h))
+    return h

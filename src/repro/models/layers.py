@@ -1,0 +1,135 @@
+"""Shared neural-net layers (functional, pytree params, logical sharding).
+
+All GEMMs route through the Template compute unit (the paper's unification);
+norms/activations/rotations run on the "PS plane" (plain XLA), mirroring the
+paper's HW/SW partitioning.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import Template
+from repro.parallel.sharding import constrain
+
+__all__ = [
+    "init_dense",
+    "dense",
+    "rms_norm",
+    "layer_norm",
+    "apply_rope",
+    "init_mlp",
+    "mlp",
+    "sinusoidal_positions",
+    "cross_entropy_loss",
+]
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(tpl: Template, p, x: jax.Array) -> jax.Array:
+    return tpl.linear(x, p["w"], p.get("b"))
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def init_norm(cfg, dtype=jnp.float32):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((cfg.d_model,), dtype), "bias": jnp.zeros((cfg.d_model,), dtype)}
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D), positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_mlp(key, cfg, d_model: Optional[int] = None, d_ff: Optional[int] = None, dtype=jnp.float32):
+    d = d_model or cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "gate": init_dense(ks[0], d, ff, dtype=dtype),
+            "up": init_dense(ks[1], d, ff, dtype=dtype),
+            "down": init_dense(ks[2], ff, d, dtype=dtype, scale=ff ** -0.5),
+        }
+    return {
+        "up": init_dense(ks[0], d, ff, dtype=dtype),
+        "down": init_dense(ks[1], ff, d, dtype=dtype, scale=ff ** -0.5),
+    }
+
+
+def mlp_axes(cfg) -> dict:
+    if cfg.act == "swiglu":
+        return {
+            "gate": {"w": ("embed", "mlp")},
+            "up": {"w": ("embed", "mlp")},
+            "down": {"w": ("mlp", "embed")},
+        }
+    return {"up": {"w": ("embed", "mlp")}, "down": {"w": ("mlp", "embed")}}
+
+
+def mlp(tpl: Template, cfg, p, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(dense(tpl, p["gate"], x)) * dense(tpl, p["up"], x)
+    else:
+        h = jax.nn.gelu(dense(tpl, p["up"], x))
+    h = constrain(h, "batch", None, "mlp")
+    return dense(tpl, p["down"], h)
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits: (..., V) f32-upcast inside; labels: (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

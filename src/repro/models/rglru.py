@@ -1,0 +1,181 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+The block's GEMMs (in/out projections, gate matrices) route through the
+Template compute unit; the element-wise linear recurrence
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    a_t = exp(c * log_lambda * r_t),   c = 8,
+    r_t = sigmoid(W_a x_t + b_a),  i_t = sigmoid(W_x x_t + b_x)
+
+is not GEMM-shaped and runs on the XLA plane: ``jax.lax.associative_scan``
+for train/prefill (log-depth, TPU-native) and an O(1) update for decode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import Template
+from repro.parallel.sharding import constrain
+
+from .layers import init_dense, dense
+
+__all__ = [
+    "init_rglru",
+    "rglru_axes",
+    "rglru_block",
+    "rglru_decode_step",
+    "init_rglru_cache",
+    "rglru_reference",
+]
+
+_C = 8.0  # RG-LRU temperature constant
+
+
+def _d_rec(cfg) -> int:
+    return getattr(cfg, "d_rec", 0) or cfg.d_model
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d, dr = cfg.d_model, _d_rec(cfg)
+    ks = jax.random.split(key, 6)
+    # Lambda param s.t. a = sigmoid(lam)^(c*r) in (0,1); init so a^c ~ U(0.9, 0.999)
+    u = jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C)) - jnp.log1p(-(u ** (1.0 / _C)))
+    ks6 = jax.random.split(ks[5], 2)
+    return {
+        "in_x": init_dense(ks[0], d, dr, dtype=dtype),
+        "in_y": init_dense(ks[1], d, dr, dtype=dtype),
+        "conv_w": (jax.random.normal(ks6[0], (cfg.ssm_conv, dr)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "gate_a": init_dense(ks[2], dr, dr, bias=True, dtype=dtype),
+        "gate_x": init_dense(ks[3], dr, dr, bias=True, dtype=dtype),
+        "lam": lam,
+        "out": init_dense(ks6[1], dr, d, dtype=dtype, scale=dr ** -0.5),
+    }
+
+
+def rglru_axes(cfg) -> dict:
+    return {
+        "in_x": {"w": ("embed", "rec")},
+        "in_y": {"w": ("embed", "rec")},
+        "conv_w": (None, "rec"),
+        "conv_b": ("rec",),
+        "gate_a": {"w": ("rec_in", "rec"), "b": ("rec",)},
+        "gate_x": {"w": ("rec_in", "rec"), "b": ("rec",)},
+        "lam": ("rec",),
+        "out": {"w": ("rec", "embed")},
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    width = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    new_state = xp[:, -(width - 1):, :] if width > 1 else hist
+    return y + b[None, None, :], new_state
+
+
+def _gates(tpl, p, x):
+    """r_t, i_t and the log-decay log_a for each position.  x: (B,S,dr).
+
+    The gate matmuls are GEMMs and route through the Template compute unit.
+    """
+    r = jax.nn.sigmoid(dense(tpl, p["gate_a"], x))
+    i = jax.nn.sigmoid(dense(tpl, p["gate_x"], x))
+    log_lam = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # log a_base < 0
+    log_a = _C * log_lam[None, None, :] * r.astype(jnp.float32)  # (B,S,dr) <= 0
+    return r, i, log_a
+
+
+def _lru_scan(log_a: jax.Array, gated_x: jax.Array,
+              init_h: Optional[jax.Array] = None) -> jax.Array:
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1 (seq).
+
+    log_a: (B,S,D) f32, gated_x: (B,S,D) f32 (= sqrt(1-a^2) * i * x).
+    """
+    a = jnp.exp(log_a)
+    b = gated_x
+    if init_h is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * init_h.astype(b.dtype))
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_reference(log_a, gated_x, init_h=None):
+    """Sequential loop oracle for tests."""
+    b, s, d = log_a.shape
+    h = jnp.zeros((b, d), jnp.float32) if init_h is None else init_h
+    out = []
+    for t in range(s):
+        h = jnp.exp(log_a[:, t]) * h + gated_x[:, t]
+        out.append(h)
+    return jnp.stack(out, axis=1)
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    dr = _d_rec(cfg)
+    return {
+        "h": jnp.zeros((batch, dr), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dr), dtype),
+    }
+
+
+def rglru_block(
+    tpl: Template,
+    cfg,
+    p,
+    u: jax.Array,
+    *,
+    init_cache: Optional[dict] = None,
+    return_cache: bool = False,
+):
+    """Full recurrent block fwd.  u: (B,S,d_model)."""
+    x = dense(tpl, p["in_x"], u)
+    y = jax.nn.gelu(dense(tpl, p["in_y"], u))
+    conv_state = None if init_cache is None else init_cache["conv"]
+    x, new_conv = _causal_conv(x, p["conv_w"], p["conv_b"], conv_state)
+    x = constrain(x, "batch", None, "rec")
+    r, i, log_a = _gates(tpl, p, x)
+    # sqrt(1 - a^2) input normalizer keeps the state variance bounded
+    sq = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    gated = sq * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    init_h = None if init_cache is None else init_cache["h"]
+    h = _lru_scan(log_a, gated, init_h).astype(x.dtype)
+    o = dense(tpl, p["out"], h * y)
+    if return_cache:
+        return o, {"h": h[:, -1].astype(jnp.float32), "conv": new_conv}
+    return o
+
+
+def rglru_decode_step(tpl: Template, cfg, p, u: jax.Array, cache: dict):
+    """One-token update.  u: (B,1,d_model)."""
+    x = dense(tpl, p["in_x"], u)
+    y = jax.nn.gelu(dense(tpl, p["in_y"], u))
+    hist = cache["conv"]
+    width = p["conv_w"].shape[0]
+    window = jnp.concatenate([hist.astype(x.dtype), x], axis=1)  # (B,W,dr)
+    xc = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype)) + p["conv_b"][None, :]
+    new_conv = window[:, 1:, :] if width > 1 else hist
+    xc = xc[:, None, :]
+    r, i, log_a = _gates(tpl, p, xc)
+    sq = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    gated = sq * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    h = jnp.exp(log_a[:, 0]) * cache["h"] + gated[:, 0]  # (B,dr)
+    o = dense(tpl, p["out"], (h.astype(x.dtype))[:, None, :] * y)
+    return o, {"h": h, "conv": new_conv}

@@ -1,0 +1,302 @@
+"""Mamba2 SSD (state-space duality) block — the attention-free sequence mixer.
+
+The paper's conv/FC unification covers the *projections* of this block (they
+route through the Template compute unit); the SSD scan itself is not
+GEMM-shaped and runs on the "PS plane" (XLA) per the paper's HW/SW
+partitioning rule — documented in DESIGN.md §4.
+
+Two execution modes:
+
+* ``ssd_chunked`` — training/prefill: the chunked SSD algorithm (Dao & Gu,
+  arXiv:2405.21060 Listing 1) under ``lax.scan`` over chunks so memory is
+  bounded by one (Q x Q) intra-chunk matrix per head, and the inter-chunk
+  state recurrence is the scan carry.
+* ``ssd_decode_step`` — serving: the O(1)-per-token recurrent update
+  ``h = exp(dt*A) h + dt * (B ⊗ x)``; ``y = C·h + D x``.
+
+Layout conventions (B=batch, S=seq, H=ssm heads, P=head dim, G=BC groups,
+N=state dim):  x: (B,S,H,P), B/C: (B,S,G,N), dt: (B,S,H).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.template import Template
+from repro.parallel.sharding import constrain
+
+from .layers import init_dense, dense, rms_norm
+
+__all__ = [
+    "init_ssm",
+    "ssm_axes",
+    "ssm_block",
+    "ssm_decode_step",
+    "init_ssm_cache",
+    "ssd_reference",
+]
+
+
+def _conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def _in_proj_dim(cfg) -> int:
+    # z (d_inner) | xBC (conv_dim) | dt (nheads)
+    return 2 * cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state + cfg.ssm_nheads
+
+
+def init_ssm(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    h = cfg.ssm_nheads
+    return {
+        "in_proj": init_dense(ks[0], cfg.d_model, _in_proj_dim(cfg), dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, _conv_dim(cfg))) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        # A in (-inf, 0): A = -exp(A_log); init A in [-1, -e]
+        "A_log": jnp.zeros((h,), jnp.float32)
+        + jnp.log(jnp.linspace(1.0, jnp.e, h)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01, jnp.float32))),
+        "norm_scale": jnp.zeros((cfg.d_inner,), dtype),
+        "out_proj": init_dense(ks[3], cfg.d_inner, cfg.d_model, dtype=dtype,
+                               scale=cfg.d_inner ** -0.5),
+    }
+
+
+def ssm_axes(cfg) -> dict:
+    """Logical axes: inner dim is the TP axis (heads shard over "model")."""
+    return {
+        "in_proj": {"w": ("embed", "ssm_inner")},
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": {"w": ("ssm_inner", "embed")},
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time.  x: (B,S,C), w: (W,C), b: (C,).
+
+    Returns (y, new_state) where state is the last W-1 inputs (for decode).
+    """
+    width = w.shape[0]
+    if state is None:
+        hist = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        hist = state.astype(x.dtype)
+    xp = jnp.concatenate([hist, x], axis=1)  # (B, S+W-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(width):
+        y = y + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    new_state = xp[:, -(width - 1):, :] if width > 1 else hist
+    return y + b[None, None, :], new_state
+
+
+def _split_in_proj(cfg, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + _conv_dim_raw(di, g, n)]
+    dt = zxbcdt[..., di + _conv_dim_raw(di, g, n):]
+    return z, xBC, dt
+
+
+def _conv_dim_raw(di, g, n):
+    return di + 2 * g * n
+
+
+def _split_xbc(cfg, xBC):
+    di, g, n = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xBC[..., :di]
+    Bm = xBC[..., di : di + g * n]
+    Cm = xBC[..., di + g * n :]
+    return x, Bm, Cm
+
+
+def _expand_groups(m: jax.Array, h: int) -> jax.Array:
+    """(B, S, G, N) -> (B, S, H, N) by repeating each group H/G times."""
+    g = m.shape[2]
+    rep = h // g
+    return jnp.repeat(m, rep, axis=2) if rep > 1 else m
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Chunked SSD.  x: (B,S,H,P), dt: (B,S,H), A: (H,) negative,
+    Bm/Cm: (B,S,H,N) (already group-expanded).  Returns y: (B,S,H,P)
+    [, final_state: (B,H,P,N)].
+
+    The inter-chunk state recurrence is the scan carry; per-chunk work is the
+    quadratic intra-chunk term (Q x Q per head, Q = ``chunk``).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # pad to a chunk multiple; dt=0 in the pad keeps the state untouched
+        # (exp(0*A)=1 decay, zero input update) so the final state is exact.
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(f32)
+    bc = Bm.reshape(b, nc, q, h, n)
+    cc = Cm.reshape(b, nc, q, h, n)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,Q,H), negative
+    cs = jnp.cumsum(dA, axis=2)  # within-chunk cumulative sum
+
+    state0 = (
+        jnp.zeros((b, h, p, n), f32)
+        if init_state is None
+        else init_state.astype(f32)
+    )
+
+    def body(state, inp):
+        xq, dtq, bq, cq, dAq, csq = inp  # leading dim B (chunk axis scanned)
+        # intra-chunk: L[q1,q2] = exp(cs[q1]-cs[q2]) for q1 >= q2
+        li = csq[:, :, None, :] - csq[:, None, :, :]  # (B,Q,Q,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)
+        xdt = xq.astype(f32) * dtq[..., None]  # (B,Q,H,P) discretized input
+        scores = jnp.einsum("bqhn,bkhn->bqkh", cq.astype(f32), bq.astype(f32))
+        y_diag = jnp.einsum("bqkh,bqkh,bkhp->bqhp", scores, L, xdt)
+        # contribution of the carried state to every position in the chunk
+        y_off = jnp.einsum(
+            "bqhn,bhpn,bqh->bqhp", cq.astype(f32), state, jnp.exp(csq)
+        )
+        # update state: decay to end-of-chunk + new inputs
+        decay_states = jnp.exp(csq[:, -1:, :] - csq)  # (B,Q,H)
+        new_state = state * jnp.exp(csq[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bkhn,bkh,bkhp->bhpn", bq.astype(f32), decay_states, xdt
+        )
+        return new_state, (y_diag + y_off)
+
+    # scan over chunks: move nc to the front
+    inputs = tuple(
+        jnp.moveaxis(t, 1, 0) for t in (xc, dtc, bc, cc, dA, cs)
+    )
+    final_state, ys = jax.lax.scan(body, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p).astype(x.dtype)[:, :s_orig]
+    if return_state:
+        return y, final_state
+    return y
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """Sequential recurrence oracle (tests): O(S) loop over time."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    f32 = jnp.float32
+    state = jnp.zeros((b, h, p, n), f32)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t].astype(f32) * A[None, :])  # (B,H)
+        upd = jnp.einsum(
+            "bh,bhp,bhn->bhpn",
+            dt[:, t].astype(f32),
+            x[:, t].astype(f32),
+            Bm[:, t].astype(f32),
+        )
+        state = state * dA[..., None, None] + upd
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, Cm[:, t].astype(f32)))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    return {
+        "state": jnp.zeros(
+            (batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, _conv_dim(cfg)), dtype),
+    }
+
+
+def ssm_block(
+    tpl: Template,
+    cfg,
+    p,
+    u: jax.Array,
+    *,
+    init_cache: Optional[dict] = None,
+    return_cache: bool = False,
+):
+    """Full Mamba2 block fwd (train/prefill).  u: (B,S,d_model)."""
+    zxbcdt = dense(tpl, p["in_proj"], u)
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt)
+    conv_state = None if init_cache is None else init_cache["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    b, s, _ = x.shape
+    h, pd, g, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    x = x.reshape(b, s, h, pd)
+    x = constrain(x, "batch", None, "act_heads", None)
+    Bm = _expand_groups(Bm.reshape(b, s, g, n), h)
+    Cm = _expand_groups(Cm.reshape(b, s, g, n), h)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    init_state = None if init_cache is None else init_cache["state"]
+    out = ssd_chunked(x, dt, A, Bm, Cm, cfg.ssm_chunk,
+                      init_state=init_state, return_state=return_cache)
+    if return_cache:
+        y, final_state = out
+    else:
+        y, final_state = out, None
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, cfg.d_inner)
+    # gated RMSNorm (Mamba2): normalize y, gate with silu(z)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    y = constrain(y, "batch", None, "act_embed")
+    o = dense(tpl, p["out_proj"], y)
+    if return_cache:
+        return o, {"state": final_state, "conv": new_conv}
+    return o
+
+
+def ssm_decode_step(tpl: Template, cfg, p, u: jax.Array, cache: dict):
+    """One-token recurrent update.  u: (B,1,d_model) -> (B,1,d_model)."""
+    zxbcdt = dense(tpl, p["in_proj"], u)
+    z, xBC, dt = _split_in_proj(cfg, zxbcdt)
+    # conv step: append to history, apply taps at the last position
+    hist = cache["conv"]  # (B, W-1, C)
+    width = p["conv_w"].shape[0]
+    window = jnp.concatenate([hist.astype(xBC.dtype), xBC], axis=1)  # (B,W,C)
+    yconv = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(xBC.dtype))
+    xBC1 = jax.nn.silu(yconv + p["conv_b"][None, :])[:, None, :]
+    new_conv = window[:, 1:, :] if width > 1 else hist
+
+    x, Bm, Cm = _split_xbc(cfg, xBC1)
+    b = x.shape[0]
+    h, pd, g, n = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    x = x.reshape(b, h, pd)
+    Bm = _expand_groups(Bm.reshape(b, 1, g, n), h)[:, 0]
+    Cm = _expand_groups(Cm.reshape(b, 1, g, n), h)[:, 0]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+
+    state = cache["state"]  # (B,H,P,N) f32
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), Bm.astype(jnp.float32))
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cm.astype(jnp.float32)).astype(x.dtype)
+    y = y + x * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"])
+    o = dense(tpl, p["out_proj"], y)
+    return o, {"state": state, "conv": new_conv}

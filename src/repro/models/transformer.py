@@ -1,0 +1,619 @@
+"""Unified TransformerLM: one model definition covering every assigned family.
+
+    dense   — qwen2.5-32b, internlm2-1.8b, mistral-nemo-12b, qwen2-0.5b
+    moe     — granite-moe-3b-a800m, phi3.5-moe-42b-a6.6b
+    hybrid  — recurrentgemma-9b (RG-LRU + local attention, pattern 2:1)
+    ssm     — mamba2-1.3b (attention-free SSD)
+    encdec  — whisper-medium (encoder + cross-attending decoder)
+    vlm     — llama-3.2-vision-90b (gated cross-attention image layers)
+
+Every layer is described by a :class:`LayerPlan` (mixer kind, cross-attention
+flag, MoE flag); a model is a repeating *pattern* of plans.  Parameters for
+pattern-position *i* are stacked over the repeat count G and executed under
+``jax.lax.scan`` (one compiled layer body regardless of depth — essential for
+the 100-layer dry-run cells), with ``jax.checkpoint`` per scanned group when
+``cfg.remat``.  Layers left over when n_layers % period != 0 run unscanned
+("tail").
+
+All GEMMs route through the Template compute unit (the paper's single
+on-chip compute unit); recurrences/scans/softmax run on the XLA "PS plane".
+
+Three entry points per the serving/training split:
+  * :func:`forward` / :func:`loss_fn`  — full-sequence teacher-forced
+  * :func:`prefill`                    — full-sequence + returns decode cache
+  * :func:`decode_step`                — one token against the ring cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.core.template import Template
+from repro.parallel.sharding import constrain
+
+from . import moe as moe_mod
+from . import rglru as rec_mod
+from . import ssm as ssm_mod
+from .attention import (
+    attention,
+    attention_axes,
+    decode_attention,
+    init_attention,
+    init_layer_cache,
+)
+from .layers import (
+    cross_entropy_loss,
+    init_mlp,
+    init_norm,
+    mlp,
+    mlp_axes,
+    norm,
+    sinusoidal_positions,
+)
+
+__all__ = [
+    "LayerPlan",
+    "plan_pattern",
+    "init_params",
+    "param_axes",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "cache_axes",
+]
+
+
+class LayerPlan(NamedTuple):
+    mixer: str  # "attn" | "local" | "attn_nc" | "rec" | "ssm"
+    cross: bool  # followed by a cross-attention sub-layer
+    moe: bool  # FFN is a mixture of experts
+
+
+def plan_pattern(cfg) -> tuple:
+    """One pattern period of layer plans."""
+    if cfg.family == "ssm":
+        return (LayerPlan("ssm", False, False),)
+    if cfg.family == "hybrid":
+        return tuple(
+            LayerPlan("local" if m == "attn" else "rec", False, False)
+            for m in cfg.pattern
+        )
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_period
+        return tuple(LayerPlan("attn", i == p - 1, False) for i in range(p))
+    if cfg.family == "encdec":
+        return (LayerPlan("attn", True, False),)
+    return (LayerPlan("attn", False, cfg.family == "moe"),)
+
+
+def _split(cfg):
+    pattern = plan_pattern(cfg)
+    period = len(pattern)
+    return pattern, cfg.n_layers // period, cfg.n_layers % period
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg, plan: LayerPlan, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm": init_norm(cfg, dtype)}
+    if plan.mixer in ("attn", "local", "attn_nc"):
+        p["attn"] = init_attention(ks[0], cfg, dtype=dtype)
+    elif plan.mixer == "rec":
+        p["rec"] = rec_mod.init_rglru(ks[0], cfg, dtype=dtype)
+    elif plan.mixer == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype=dtype)
+    else:  # pragma: no cover
+        raise ValueError(plan.mixer)
+    if plan.cross:
+        p["cross_norm"] = init_norm(cfg, dtype)
+        p["cross"] = init_attention(ks[1], cfg, bias=False, dtype=dtype)
+        if cfg.family == "vlm":
+            p["cross_gate"] = jnp.zeros((), dtype)
+    if plan.mixer != "ssm":  # mamba2 blocks have no separate FFN
+        p["ffn_norm"] = init_norm(cfg, dtype)
+        p["ffn"] = (
+            moe_mod.init_moe(ks[2], cfg, dtype=dtype)
+            if plan.moe
+            else init_mlp(ks[2], cfg, dtype=dtype)
+        )
+    return p
+
+
+def _layer_axes(cfg, plan: LayerPlan):
+    ax = {"norm": None}
+    if plan.mixer in ("attn", "local", "attn_nc"):
+        ax["attn"] = attention_axes(cfg)
+    elif plan.mixer == "rec":
+        ax["rec"] = rec_mod.rglru_axes(cfg)
+    elif plan.mixer == "ssm":
+        ax["ssm"] = ssm_mod.ssm_axes(cfg)
+    if plan.cross:
+        ax["cross_norm"] = None
+        ax["cross"] = attention_axes(cfg, bias=False)
+        if cfg.family == "vlm":
+            ax["cross_gate"] = None
+    if plan.mixer != "ssm":
+        ax["ffn_norm"] = None
+        ax["ffn"] = moe_mod.moe_axes(cfg) if plan.moe else mlp_axes(cfg)
+    return ax
+
+
+def _is_axes_leaf(x):
+    return x is None or (
+        isinstance(x, tuple)
+        and len(x) > 0
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def _stack_axes(ax):
+    """Prepend the (unsharded) scan axis to every logical-axes leaf."""
+    return jax.tree.map(
+        lambda t: None if t is None else (None, *t), ax, is_leaf=_is_axes_leaf
+    )
+
+
+def init_params(key, cfg, dtype=None):
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    pattern, g, r = _split(cfg)
+    keys = jax.random.split(key, 8)
+    d, v = cfg.d_model, cfg.vocab
+
+    params = {
+        "embed": (jax.random.normal(keys[0], (v, d)) * d ** -0.5).astype(dtype),
+        "final_norm": init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": (jax.random.normal(keys[1], (d, v)) * d ** -0.5).astype(dtype)
+        }
+
+    def stacked(base_key, plan):
+        ks = jax.random.split(base_key, g)
+        return jax.vmap(lambda k: _init_layer(k, cfg, plan, dtype))(ks)
+
+    bkeys = jax.random.split(keys[2], len(pattern))
+    params["blocks"] = tuple(stacked(bkeys[i], p) for i, p in enumerate(pattern))
+    tkeys = jax.random.split(keys[3], max(r, 1))
+    params["tail"] = tuple(
+        _init_layer(tkeys[j], cfg, pattern[j], dtype) for j in range(r)
+    )
+
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(keys[4], cfg.n_encoder_layers + 1)
+        enc_plan = LayerPlan("attn_nc", False, False)
+        eg = cfg.n_encoder_layers
+        eks = jax.random.split(ekeys[0], eg)
+        params["encoder"] = {
+            "blocks": (jax.vmap(lambda k: _init_layer(k, cfg, enc_plan, dtype))(eks),),
+            "final_norm": init_norm(cfg, dtype),
+        }
+    return params
+
+
+def param_axes(cfg):
+    pattern, g, r = _split(cfg)
+    ax = {
+        "embed": ("vocab", "embed"),
+        "final_norm": None,
+    }
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = {"w": ("embed", "vocab")}
+    ax["blocks"] = tuple(_stack_axes(_layer_axes(cfg, p)) for p in pattern)
+    ax["tail"] = tuple(_layer_axes(cfg, pattern[j]) for j in range(r))
+    if cfg.family == "encdec":
+        enc_plan = LayerPlan("attn_nc", False, False)
+        ax["encoder"] = {
+            "blocks": (_stack_axes(_layer_axes(cfg, enc_plan)),),
+            "final_norm": None,
+        }
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# per-layer execution
+# ---------------------------------------------------------------------------
+
+
+def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
+               cache=None, ctx=None, cache_len=0, t=None):
+    """Returns (h, new_cache_or_None, aux)."""
+    newc = {}
+    aux = jnp.zeros((), jnp.float32)
+
+    if plan.mixer in ("attn", "local", "attn_nc"):
+        window = cfg.window if plan.mixer == "local" else 0
+        causal = plan.mixer != "attn_nc"
+        a_in = norm(cfg, p["norm"], h)
+        if mode != "decode":
+            a_in = constrain(a_in, "batch", "seq_act", "act_embed")
+        if mode == "decode":
+            out, c = decode_attention(
+                tpl, p["attn"], a_in, cache["attn"], cfg=cfg, t=t, window=window
+            )
+            newc["attn"] = c
+        else:
+            clen = 0
+            if mode == "prefill":
+                clen = min(window, cache_len) if window else cache_len
+            out, c = attention(
+                tpl, p["attn"], a_in, cfg=cfg, positions=positions,
+                causal=causal, window=window, cache_len=clen,
+            )
+            if mode == "prefill":
+                newc["attn"] = c
+        if mode != "decode":
+            out = constrain(out, "batch", "seq_act", "act_embed")
+            out = _checkpoint_name(out, "attn_out")
+        h = h + out
+    elif plan.mixer == "rec":
+        a_in = norm(cfg, p["norm"], h)
+        if mode == "decode":
+            out, c = rec_mod.rglru_decode_step(tpl, cfg, p["rec"], a_in, cache["rec"])
+            newc["rec"] = c
+        elif mode == "prefill":
+            out, c = rec_mod.rglru_block(tpl, cfg, p["rec"], a_in, return_cache=True)
+            newc["rec"] = c
+        else:
+            out = rec_mod.rglru_block(tpl, cfg, p["rec"], a_in)
+        if mode != "decode":
+            out = constrain(out, "batch", "seq_act", "act_embed")
+        h = h + out
+    elif plan.mixer == "ssm":
+        a_in = norm(cfg, p["norm"], h)
+        if mode == "decode":
+            out, c = ssm_mod.ssm_decode_step(tpl, cfg, p["ssm"], a_in, cache["ssm"])
+            newc["ssm"] = c
+        elif mode == "prefill":
+            out, c = ssm_mod.ssm_block(tpl, cfg, p["ssm"], a_in, return_cache=True)
+            newc["ssm"] = c
+        else:
+            out = ssm_mod.ssm_block(tpl, cfg, p["ssm"], a_in)
+        if mode != "decode":
+            out = constrain(out, "batch", "seq_act", "act_embed")
+        h = h + out
+
+    if plan.cross:
+        c_in = norm(cfg, p["cross_norm"], h)
+        if mode == "decode":
+            out, _ = decode_attention(
+                tpl, p["cross"], c_in, cache["cross"], cfg=cfg, t=t, cross=True
+            )
+            newc["cross"] = cache["cross"]  # static across decode steps
+        else:
+            clen = ctx.shape[1] if mode == "prefill" else 0
+            out, c = attention(
+                tpl, p["cross"], c_in, cfg=cfg, positions=positions,
+                kv_source=ctx, cache_len=clen,
+            )
+            if mode == "prefill":
+                newc["cross"] = c
+        if "cross_gate" in p:
+            out = jnp.tanh(p["cross_gate"]).astype(out.dtype) * out
+        if mode != "decode":
+            out = constrain(out, "batch", "seq_act", "act_embed")
+        h = h + out
+
+    if plan.mixer != "ssm":
+        f_in = norm(cfg, p["ffn_norm"], h)
+        if mode != "decode":
+            f_in = constrain(f_in, "batch", "seq_act", "act_embed")
+        if plan.moe:
+            out, aux = moe_mod.moe_ffn(tpl, cfg, p["ffn"], f_in)
+        else:
+            out = mlp(tpl, cfg, p["ffn"], f_in)
+        if mode != "decode":
+            out = constrain(out, "batch", "seq_act", "act_embed")
+        h = h + out
+
+    h = constrain(h, "batch", "seq_act", "act_embed")
+    return h, (newc or None), aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
+               cache=None, ctx=None, cache_len=0, t=None, remat=False):
+    """Scan the stacked groups + run tail layers.  Returns (h, cache', aux)."""
+    n_tail = len(params["tail"]) if "tail" in params else 0
+
+    if mode in ("train", "fwd"):
+        def body(carry, xs):
+            hh, aux = carry
+            for i, plan in enumerate(pattern):
+                hh, _, a = _run_layer(
+                    tpl, cfg, plan, xs[i], hh,
+                    positions=positions, mode=mode, ctx=ctx,
+                )
+                aux = aux + a
+            return (hh, aux), None
+
+        if remat and getattr(cfg, "remat_policy", "") == "attn_out":
+            body_fn = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.save_only_these_names("attn_out"),
+            )
+        elif remat:
+            body_fn = jax.checkpoint(body)
+        else:
+            body_fn = body
+        (h, aux), _ = jax.lax.scan(body_fn, (h, jnp.zeros((), jnp.float32)),
+                                   params["blocks"])
+        for j in range(n_tail):
+            h, _, a = _run_layer(
+                tpl, cfg, pattern[j], params["tail"][j], h,
+                positions=positions, mode=mode, ctx=ctx,
+            )
+            aux = aux + a
+        return h, None, aux
+
+    if mode == "prefill":
+        def body(carry, xs):
+            hh, aux = carry
+            caches = []
+            for i, plan in enumerate(pattern):
+                hh, c, a = _run_layer(
+                    tpl, cfg, plan, xs[i], hh, positions=positions,
+                    mode=mode, ctx=ctx, cache_len=cache_len,
+                )
+                caches.append(c)
+                aux = aux + a
+            return (hh, aux), tuple(caches)
+
+        (h, aux), cache_blocks = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+        tail_caches = []
+        for j in range(n_tail):
+            h, c, a = _run_layer(
+                tpl, cfg, pattern[j], params["tail"][j], h, positions=positions,
+                mode=mode, ctx=ctx, cache_len=cache_len,
+            )
+            tail_caches.append(c)
+            aux = aux + a
+        return h, {"blocks": cache_blocks, "tail": tuple(tail_caches)}, aux
+
+    # decode
+    def body(carry, xs):
+        hh = carry
+        p_group, c_group = xs
+        newcs = []
+        for i, plan in enumerate(pattern):
+            hh, c, _ = _run_layer(
+                tpl, cfg, plan, p_group[i], hh,
+                positions=positions, mode=mode, cache=c_group[i], t=t,
+            )
+            newcs.append(c)
+        return hh, tuple(newcs)
+
+    h, cache_blocks = jax.lax.scan(body, h, (params["blocks"], cache["blocks"]))
+    tail_caches = []
+    for j in range(n_tail):
+        h, c, _ = _run_layer(
+            tpl, cfg, pattern[j], params["tail"][j], h,
+            positions=positions, mode=mode, cache=cache["tail"][j], t=t,
+        )
+        tail_caches.append(c)
+    return h, {"blocks": cache_blocks, "tail": tuple(tail_caches)}, jnp.zeros((), jnp.float32)
+
+
+def _encode(tpl, cfg, enc_params, frames):
+    """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
+    nf, d = frames.shape[1], cfg.d_model
+    h = frames + sinusoidal_positions(nf, d, frames.dtype)[None]
+    h = constrain(h, "batch", "ctx", "act_embed")
+    plan = LayerPlan("attn_nc", False, False)
+
+    def body(hh, xs):
+        hh, _, _ = _run_layer(
+            tpl, cfg, plan, xs, hh,
+            positions=jnp.arange(nf), mode="fwd",
+        )
+        return hh, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, h, enc_params["blocks"][0])
+    return norm(cfg, enc_params["final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(h, "batch", "seq_act", "act_embed")
+
+
+def _head(tpl, cfg, params, h):
+    h = norm(cfg, params["final_norm"], h)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+    logits = tpl.matmul(h, w)
+    return constrain(logits, "batch", "seq_act", "vocab")
+
+
+def forward(tpl: Template, cfg, params, tokens, *, ctx=None, mode: str = "train"):
+    """Teacher-forced full-sequence forward.  tokens: (B, S) -> logits (B,S,V)."""
+    s = tokens.shape[1]
+    h = _embed_tokens(cfg, params, tokens)
+    if getattr(cfg, "abs_pos", False):
+        h = h + sinusoidal_positions(s, cfg.d_model, h.dtype)[None]
+    if cfg.family == "encdec":
+        ctx = _encode(tpl, cfg, params["encoder"], ctx)
+    pattern, _, _ = _split(cfg)
+    positions = jnp.arange(s)
+    h, _, aux = _run_stack(
+        tpl, cfg, params, h, pattern=pattern, mode=mode, positions=positions,
+        ctx=ctx, remat=cfg.remat,
+    )
+    return _head(tpl, cfg, params, h), aux
+
+
+def loss_fn(tpl: Template, cfg, params, batch, aux_weight: float = 0.01):
+    """batch: {"tokens": (B,S) int32 [, "labels": (B,S), "ctx": (B,T,d)]}.
+
+    Without explicit labels, next-token targets are derived by shifting
+    (last position masked).  labels < 0 are masked out.
+    Returns (scalar loss, metrics)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(tpl, cfg, params, tokens, ctx=batch.get("ctx"))
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1
+        )
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = cross_entropy_loss(logits, jnp.maximum(labels, 0), mask)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
+            cache_len: Optional[int] = None):
+    """Process the prompt; return (last-position logits (B,V), decode cache)."""
+    s = tokens.shape[1]
+    cache_len = cache_len or s
+    h = _embed_tokens(cfg, params, tokens)
+    if getattr(cfg, "abs_pos", False):
+        h = h + sinusoidal_positions(s, cfg.d_model, h.dtype)[None]
+    if cfg.family == "encdec":
+        ctx = _encode(tpl, cfg, params["encoder"], ctx)
+    pattern, _, _ = _split(cfg)
+    h, cache, _ = _run_stack(
+        tpl, cfg, params, h, pattern=pattern, mode="prefill",
+        positions=jnp.arange(s), ctx=ctx, cache_len=cache_len,
+    )
+    logits = _head(tpl, cfg, params, h[:, -1:])
+    return logits[:, 0], cache
+
+
+def _sinusoid_at(t, d, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    angle = t.astype(jnp.float32) / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)]).astype(dtype)
+
+
+def decode_step(tpl: Template, cfg, params, token, t, cache):
+    """One decode step.  token: (B,1) int32, t: scalar int32 position.
+
+    Returns (logits (B,V), new_cache)."""
+    t = jnp.asarray(t, jnp.int32).reshape(())
+    h = _embed_tokens(cfg, params, token)
+    if getattr(cfg, "abs_pos", False):
+        h = h + _sinusoid_at(t, cfg.d_model, h.dtype)[None, None]
+    pattern, _, _ = _split(cfg)
+    h, cache, _ = _run_stack(
+        tpl, cfg, params, h, pattern=pattern, mode="decode",
+        positions=t[None], t=t, cache=cache,
+    )
+    logits = _head(tpl, cfg, params, h)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# decode-cache construction (for dry-run decode cells and serving)
+# ---------------------------------------------------------------------------
+
+
+def _ctx_len(cfg) -> int:
+    if cfg.family == "encdec":
+        return cfg.n_frames
+    if cfg.family == "vlm":
+        return cfg.n_image_tokens
+    return 0
+
+
+def _init_layer_cache(cfg, plan: LayerPlan, batch, cache_len, dtype, filled_ctx=True):
+    c = {}
+    if plan.mixer in ("attn", "local"):
+        clen = min(cfg.window, cache_len) if (plan.mixer == "local" and cfg.window) else cache_len
+        c["attn"] = init_layer_cache(batch, cfg.n_kv_heads, clen, cfg.head_dim, dtype)
+    elif plan.mixer == "rec":
+        c["rec"] = rec_mod.init_rglru_cache(cfg, batch, dtype)
+    elif plan.mixer == "ssm":
+        c["ssm"] = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if plan.cross:
+        tctx = _ctx_len(cfg)
+        cc = init_layer_cache(batch, cfg.n_kv_heads, tctx, cfg.head_dim, dtype)
+        if filled_ctx:  # as-if-prefilled: cross context slots are all valid
+            cc["pos"] = jnp.arange(tctx, dtype=jnp.int32)
+        c["cross"] = cc
+    return c
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    """Zero-initialized decode cache with the exact prefill-cache structure."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    pattern, g, r = _split(cfg)
+
+    def stacked(plan):
+        one = _init_layer_cache(cfg, plan, batch, cache_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (g, *a.shape)), one)
+
+    return {
+        "blocks": tuple(stacked(p) for p in pattern),
+        "tail": tuple(
+            _init_layer_cache(cfg, pattern[j], batch, cache_len, dtype)
+            for j in range(r)
+        ),
+    }
+
+
+def cache_axes(cfg, cache_shapes):
+    """Logical axes tree for a cache pytree (mirrors :func:`init_cache`).
+
+    Leaves are named — k/v ring buffers shard (batch, kv_heads); recurrent
+    and conv states shard (batch, inner); pos vectors replicate.  Stacked
+    (scan-group) leading axes get a None prefix.
+    """
+
+    def by_name(subtree_name, leaf, stacked):
+        pre = (None,) if stacked else ()
+        if subtree_name in ("k", "v"):
+            # ring caches shard their *seq* dim over the model axis
+            # (flash-decoding style) because GQA kv counts (8) do not divide
+            # 16-way TP; heads replicate, the softmax/LSE reduces over shards.
+            return pre + ("batch", None, "seq_kv", None)
+        if subtree_name == "pos":
+            return None
+        if subtree_name == "h":
+            return pre + ("batch", "rec")
+        if subtree_name == "state":
+            return pre + ("batch", "act_heads", None, None)
+        if subtree_name == "conv":
+            return pre + ("batch", None, "ssm_inner")
+        return None
+
+    def walk(tree, stacked):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    out[k] = walk(v, stacked)
+                elif isinstance(v, tuple):
+                    out[k] = tuple(walk(x, stacked) for x in v)
+                else:
+                    out[k] = by_name(k, v, stacked)
+            return out
+        if isinstance(tree, tuple):
+            return tuple(walk(x, stacked) for x in tree)
+        return None
+
+    return {
+        "blocks": tuple(walk(b, True) for b in cache_shapes["blocks"]),
+        "tail": tuple(walk(tc, False) for tc in cache_shapes["tail"]),
+    }

@@ -1,0 +1,29 @@
+"""Learning-rate schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup", "cosine_warmup"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.asarray(lr, jnp.float32) * jnp.minimum(1.0, s / max(warmup, 1))
+
+    return fn
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+
+    return fn

@@ -1,0 +1,24 @@
+"""Distribution substrate: logical-axis sharding rules (DP/FSDP/TP/EP/SP)."""
+from .sharding import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    ShardingRules,
+    active_mesh,
+    constrain,
+    logical_to_spec,
+    named_sharding,
+    tree_shardings,
+    use_mesh,
+)
+
+__all__ = [
+    "SERVE_RULES",
+    "TRAIN_RULES",
+    "ShardingRules",
+    "active_mesh",
+    "constrain",
+    "logical_to_spec",
+    "named_sharding",
+    "tree_shardings",
+    "use_mesh",
+]

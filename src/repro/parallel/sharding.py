@@ -1,0 +1,274 @@
+"""Logical-axis sharding: DP / FSDP / TP / EP / SP from one rule table.
+
+Model code annotates tensors with *logical* axis names ("batch", "embed",
+"heads", "mlp", "vocab", "experts", ...).  A :class:`ShardingRules` table maps
+logical names to mesh axes; :func:`constrain` applies
+``with_sharding_constraint`` only when a mesh context is active, so the same
+model code runs unsharded on one CPU device and fully sharded on a 512-chip
+multi-pod mesh.
+
+Rules follow the MaxText convention; the defaults implement:
+  * batch            -> ("pod", "data")   data parallel across pods + pod axis
+  * embed/ffn params -> "model"           tensor parallel
+  * fsdp dim         -> "data"            ZeRO-3 parameter sharding (training)
+  * experts          -> "model"           expert parallel (MoE)
+  * kv_heads         -> "model"           GSPMD pads when not divisible
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+    "use_mesh",
+    "active_mesh",
+    "logical_to_spec",
+    "constrain",
+    "named_sharding",
+    "tree_shardings",
+]
+
+MeshAxes = Union[str, tuple, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis name -> mesh axis (or tuple, or None)."""
+
+    rules: tuple = ()
+
+    def get(self, name: Optional[str]) -> MeshAxes:
+        if name is None:
+            return None
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def with_overrides(self, **overrides) -> "ShardingRules":
+        kept = tuple((k, v) for k, v in self.rules if k not in overrides)
+        return ShardingRules(rules=kept + tuple(overrides.items()))
+
+
+def _mk(rules: dict) -> ShardingRules:
+    return ShardingRules(rules=tuple(rules.items()))
+
+
+#: Training: FSDP over "data" + TP over "model"; batch over every data-ish axis.
+TRAIN_RULES = _mk(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        # sequence parallelism for the residual stream / remat stash: shards
+        # per-layer saved activations 16x and keeps norm/add seq-local
+        # (default ON for training since §Perf iteration 2)
+        "seq_act": "model",
+        "seq_kv": "model",  # decode KV-cache seq dim (flash-decoding style)
+        "embed": "data",  # FSDP shard dim of 2D params
+        "embed_tp": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv": "model",  # flattened heads*head_dim param dim
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "expert_cap": None,  # capacity-dim EP variant (see moe.py / §Perf B)
+        "ssm_inner": "model",  # mamba2 inner dim (heads*headdim + BC groups)
+        "rec": "model",  # RG-LRU recurrent width
+        "rec_in": None,  # gate matrix input dim (dense dr x dr)
+        "conv_io": None,
+        "state": None,
+        "ctx": None,  # cross-attention context length (frames / image tokens)
+        "act_heads": "model",
+        "act_embed": None,
+    }
+)
+
+#: Serving: params replicated over "data" (no FSDP), TP over "model";
+#: batch over data axes.
+SERVE_RULES = _mk(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "seq_act": None,
+        "seq_kv": "model",
+        "embed": None,
+        "embed_tp": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "qkv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "expert_cap": None,
+        "ssm_inner": "model",
+        "rec": "model",
+        "rec_in": None,
+        "conv_io": None,
+        "state": None,
+        "ctx": None,
+        "act_heads": "model",
+        "act_embed": None,
+    }
+)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[ShardingRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: ShardingRules):
+    """Activate a mesh + rule table for ``constrain``/``named_sharding``."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, rules
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    *,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[ShardingRules] = None,
+    dim_sizes: Optional[Sequence[int]] = None,
+    require_divisible: bool = False,
+) -> P:
+    """Translate logical axis names to a PartitionSpec.
+
+    If ``dim_sizes`` is given, axes whose size is not divisible by the mesh
+    axis size are only kept when GSPMD padding is acceptable (always true for
+    jit inputs/constraints); we still drop the mapping when the dim is
+    *smaller* than the mesh axis product (e.g. batch=1 over 16-way data).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if rules is None:
+        return P()
+    out = []
+    for i, name in enumerate(logical):
+        axes = rules.get(name)
+        if axes is not None and mesh is not None:
+            # drop mesh axes the current mesh does not have (e.g. "pod" on
+            # the single-pod mesh)
+            present = set(mesh.axis_names)
+            if isinstance(axes, str):
+                axes = axes if axes in present else None
+            else:
+                axes = tuple(a for a in axes if a in present) or None
+                if axes is not None and len(axes) == 1:
+                    axes = axes[0]
+        if axes is not None and mesh is not None and dim_sizes is not None:
+            if dim_sizes[i] < _axis_size(mesh, axes):
+                axes = None
+            elif require_divisible and dim_sizes[i] % _axis_size(mesh, axes):
+                # jit in/out shardings must divide exactly (GSPMD pads only
+                # inside the program, not at its boundary)
+                axes = None
+        out.append(axes)
+    # a mesh axis may appear at most once: keep its first (leftmost) use.
+    # (e.g. with sequence parallelism seq_act->model, a logits constraint
+    # (batch, seq_act, vocab) would map "model" twice)
+    seen: set = set()
+    for i, axes in enumerate(out):
+        if axes is None:
+            continue
+        tup = (axes,) if isinstance(axes, str) else tuple(axes)
+        kept = tuple(a for a in tup if a not in seen)
+        seen.update(kept)
+        if not kept:
+            out[i] = None
+        elif len(kept) == 1:
+            out[i] = kept[0]
+        else:
+            out[i] = kept
+    # trailing Nones are implicit
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = logical_to_spec(logical, dim_sizes=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def named_sharding(
+    mesh: Mesh,
+    rules: ShardingRules,
+    logical: Sequence[Optional[str]],
+    dim_sizes: Optional[Sequence[int]] = None,
+    require_divisible: bool = False,
+) -> NamedSharding:
+    return NamedSharding(
+        mesh,
+        logical_to_spec(
+            logical, mesh=mesh, rules=rules, dim_sizes=dim_sizes,
+            require_divisible=require_divisible,
+        ),
+    )
+
+
+def _is_axes_leaf(x) -> bool:
+    return x is None or (
+        isinstance(x, tuple)
+        and len(x) > 0
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def tree_shardings(mesh: Mesh, rules: ShardingRules, shapes_tree, axes_tree):
+    """Build a NamedSharding pytree from a ShapeDtypeStruct tree and a parallel
+    tree of logical-axis tuples (None leaf => replicated).
+
+    Mapped over ``axes_tree`` first so tuple leaves are not traversed as
+    subtrees.
+    """
+
+    def one(axes_leaf, shape_leaf):
+        if axes_leaf is None:
+            return NamedSharding(mesh, P())
+        return named_sharding(
+            mesh, rules, axes_leaf, dim_sizes=shape_leaf.shape,
+            require_divisible=True,
+        )
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)

@@ -1,0 +1,15 @@
+from .failover import (
+    FailureInjector,
+    HeartbeatMonitor,
+    SimulatedFailure,
+    detect_stragglers,
+    run_with_restarts,
+)
+
+__all__ = [
+    "FailureInjector",
+    "HeartbeatMonitor",
+    "SimulatedFailure",
+    "detect_stragglers",
+    "run_with_restarts",
+]

@@ -1,0 +1,119 @@
+"""Paper-faithful plane: CNN zoo on the compute unit + FPGA model vs Table 1/2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fpga_model import (
+    BOARDS,
+    NETWORKS,
+    TemplateInstance,
+    ULTRA96,
+    ZCU102,
+    ZCU104,
+    alexnet_layers,
+    evaluate_network,
+    lenet_layers,
+)
+from repro.core.template import default_template
+from repro.core.tiling import ConvTiling, FCTiling
+from repro.models.cnn import CNN_ZOO, LENET, cnn_forward, init_cnn
+
+TPL = default_template()
+
+
+def _small_lenet_input():
+    return jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 1)) * 0.5
+
+
+def test_lenet_forward_shapes():
+    params = init_cnn(jax.random.PRNGKey(0), LENET)
+    out = cnn_forward(TPL, LENET, params, _small_lenet_input())
+    assert out.shape == (2, 10)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_lenet_quantized_close_to_float():
+    params = init_cnn(jax.random.PRNGKey(0), LENET, scale=0.3)
+    x = _small_lenet_input()
+    f = cnn_forward(TPL, LENET, params, x, quantized=False)
+    q = cnn_forward(TPL, LENET, params, x, quantized=True)
+    # Q2.14 resolution is 6e-5; logits must agree to ~1e-2 through 5 layers
+    assert float(jnp.abs(f - q).max()) < 5e-2
+    # and classification must agree
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(f, -1)), np.asarray(jnp.argmax(q, -1))
+    )
+
+
+def test_alexnet_reduced_forward():
+    import dataclasses
+
+    spec = dataclasses.replace(CNN_ZOO["alexnet"], input_hw=128)
+    params = init_cnn(jax.random.PRNGKey(1), spec)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 128, 128, 3)) * 0.5
+    out = cnn_forward(TPL, spec, params, x)
+    assert out.shape == (1, 1000)
+    assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# FPGA analytic model vs the paper's tables
+# ---------------------------------------------------------------------------
+
+PAPER_CU = {"Ultra96": (12, 24), "ZCU104": (20, 30), "ZCU102": (20, 55)}
+PAPER_GOPS = {"Ultra96": 51.0, "ZCU104": 107.0, "ZCU102": 230.0}
+
+
+def _instance(board_name):
+    board = BOARDS[board_name]
+    mu, tau = PAPER_CU[board_name]
+    conv = ConvTiling(t_r=27, t_c=27, mu=mu, tau=tau)
+    fc = FCTiling(lam=1024, omega=64, mu=mu, tau=tau)
+    return TemplateInstance(board=board, conv=conv, fc=fc)
+
+
+@pytest.mark.parametrize("board", list(PAPER_CU))
+def test_paper_compute_units_fit_their_boards(board):
+    inst = _instance(board)
+    assert inst.dsp <= BOARDS[board].dsp
+    assert inst.bram18 <= BOARDS[board].bram18
+    assert inst.fits()
+
+
+@pytest.mark.parametrize("board", list(PAPER_CU))
+def test_conv_throughput_within_band_of_table1(board):
+    """Modeled conv-plane GOP/s within [0.4x, 1.6x] of the paper's number.
+
+    An analytic model cannot hit synthesized numbers exactly; the band
+    catches order-of-magnitude/unit errors while tolerating modeling error.
+    """
+    inst = _instance(board)
+    rep = evaluate_network("alexnet", alexnet_layers(), inst, batch=4)
+    paper = PAPER_GOPS[board]
+    assert 0.4 * paper < rep.conv_gops < 1.6 * paper, rep.summary()
+
+
+def test_peak_scales_with_compute_unit():
+    """GOP/s ordering must follow the paper: Ultra96 < ZCU104 < ZCU102."""
+    gops = [
+        evaluate_network("alexnet", alexnet_layers(), _instance(b), batch=4).conv_gops
+        for b in ("Ultra96", "ZCU104", "ZCU102")
+    ]
+    assert gops[0] < gops[1] < gops[2]
+
+
+def test_lenet_low_utilization():
+    """Tiny network: latency dominated by fill/transfer, GOP/s far below peak."""
+    inst = _instance("Ultra96")
+    rep = evaluate_network("lenet", lenet_layers(), inst)
+    assert rep.gops < inst.peak_gops
+
+
+def test_network_tables_complete():
+    for name, fn in NETWORKS.items():
+        layers = fn()
+        assert all(l.ops > 0 for l in layers)
+    # AlexNet conv ops ≈ 1.3 GOP (Krizhevsky): sanity vs eq. (2)
+    conv_ops = sum(l.ops for l in alexnet_layers() if l.kind == "conv")
+    assert 1.0e9 < conv_ops < 1.5e9

@@ -1,0 +1,93 @@
+"""Q2.14 fixed-point numerics: roundtrip, saturation, STE, hypothesis props."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    Q2_14,
+    QFormat,
+    dequantize,
+    fake_quant_fmt,
+    qmatmul_real,
+    qmatmul_ref,
+    quantize,
+)
+
+
+def test_format_ranges():
+    assert Q2_14.max_val == pytest.approx(2 - 2 ** -14)
+    assert Q2_14.min_val == -2.0
+    assert Q2_14.resolution == 2 ** -14
+    assert Q2_14.raw_max == 2 ** 15 - 1
+    assert Q2_14.raw_min == -(2 ** 15)
+
+
+def test_format_validation():
+    with pytest.raises(ValueError):
+        QFormat(10, 10)
+    with pytest.raises(ValueError):
+        QFormat(0, 14)
+
+
+@given(st.floats(min_value=-1.99, max_value=1.99, allow_nan=False))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_error_bounded(x):
+    """|dequantize(quantize(x)) - x| <= resolution/2 inside the range."""
+    q = quantize(jnp.float32(x))
+    back = float(dequantize(q))
+    assert abs(back - x) <= Q2_14.resolution / 2 + 1e-9
+
+
+@given(st.floats(min_value=-100, max_value=100, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_saturation(x):
+    q = quantize(jnp.float32(x))
+    back = float(dequantize(q))
+    assert Q2_14.min_val - 1e-6 <= back <= Q2_14.max_val + 1e-6
+
+
+def test_quantize_int16_storage():
+    assert quantize(jnp.zeros((4,))).dtype == jnp.int16
+
+
+def test_fake_quant_ste_gradient():
+    """Straight-through: grad 1 inside the range, 0 outside."""
+    g = jax.grad(lambda x: fake_quant_fmt(x).sum())(jnp.array([0.5, 1.5, 3.0, -5.0]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_qmatmul_matches_float_within_error_bound():
+    """End-to-end fixed-point GEMM error vs float: bounded by k * eps terms."""
+    key = jax.random.PRNGKey(0)
+    m, k, n = 32, 64, 16
+    x = jax.random.normal(key, (m, k)) * 0.1
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+    got = qmatmul_real(x, w)
+    want = x @ w
+    # error model: each product has quantization error ~res; k accumulations
+    bound = k * Q2_14.resolution * 0.5 + Q2_14.resolution
+    assert float(jnp.abs(got - want).max()) < bound
+
+
+@given(
+    st.integers(min_value=1, max_value=8),
+    st.integers(min_value=1, max_value=8),
+)
+@settings(max_examples=20, deadline=None)
+def test_qmatmul_ref_saturates_not_wraps(m, n):
+    """Max-magnitude products must clip at the Q write-back (k=1 so the
+    int32 accumulator itself cannot wrap — deep accumulations use the
+    documented wraparound int32 semantics vs the FPGA 48-bit cascade)."""
+    xq = jnp.full((m, 1), Q2_14.raw_max, jnp.int16)
+    wq = jnp.full((1, n), Q2_14.raw_max, jnp.int16)
+    out = qmatmul_ref(xq, wq)
+    assert int(out.max()) == Q2_14.raw_max  # saturated
+
+
+def test_quantize_is_round_to_nearest():
+    res = Q2_14.resolution
+    x = jnp.array([0.4 * res, 0.6 * res, -0.6 * res])
+    q = np.asarray(quantize(x))
+    np.testing.assert_array_equal(q, [0, 1, -1])

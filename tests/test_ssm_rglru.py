@@ -1,0 +1,111 @@
+"""Sequence-mixer correctness: SSD chunked vs recurrence; RG-LRU scan vs loop."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import all_configs, reduced
+from repro.core.template import default_template
+from repro.models import rglru, ssm
+
+TPL = default_template()
+CFG = reduced(all_configs()["mamba2-1.3b"])
+RCFG = reduced(all_configs()["recurrentgemma-9b"])
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+@pytest.mark.parametrize("s", [16, 24, 32])
+def test_ssd_chunked_matches_recurrence(chunk, s):
+    """Chunk size must not change the result (incl. s % chunk != 0)."""
+    b, h, p, n = 2, 4, 8, 16
+    key = jax.random.PRNGKey(chunk * 100 + s)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, h, n)) * 0.3
+    got, st_c = ssm.ssd_chunked(x, dt, A, B, C, chunk, return_state=True)
+    want, st_r = ssm.ssd_reference(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(st_r), atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_carried_state_continuation():
+    """ssd(x1++x2) == ssd(x2 | final_state(x1)) — prefill continuation."""
+    b, s, h, p, n = 1, 24, 2, 8, 8
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, n)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, h, n)) * 0.3
+    full = ssm.ssd_chunked(x, dt, A, B, C, 8)
+    cut = 16
+    _, state1 = ssm.ssd_chunked(
+        x[:, :cut], dt[:, :cut], A, B[:, :cut], C[:, :cut], 8, return_state=True
+    )
+    part2 = ssm.ssd_chunked(
+        x[:, cut:], dt[:, cut:], A, B[:, cut:], C[:, cut:], 8, init_state=state1
+    )
+    np.testing.assert_allclose(
+        np.asarray(part2), np.asarray(full[:, cut:]), atol=1e-4, rtol=1e-3
+    )
+
+
+def test_ssm_block_decode_parity():
+    key = jax.random.PRNGKey(0)
+    p = ssm.init_ssm(key, CFG)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (2, 17, CFG.d_model))
+    y_full = ssm.ssm_block(TPL, CFG, p, u)
+    _, cache = ssm.ssm_block(TPL, CFG, p, u[:, :-1], return_cache=True)
+    y_dec, _ = ssm.ssm_decode_step(TPL, CFG, p, u[:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, -1]), atol=1e-3, rtol=1e-3
+    )
+
+
+@given(st.integers(min_value=1, max_value=1000))
+@settings(max_examples=25, deadline=None)
+def test_rglru_scan_matches_loop(seed):
+    key = jax.random.PRNGKey(seed)
+    b, s, d = 2, 12, 8
+    log_a = -jax.nn.softplus(jax.random.normal(key, (b, s, d)))
+    gx = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+    got = rglru._lru_scan(log_a, gx)
+    want = rglru.rglru_reference(log_a, gx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_scan_with_initial_state():
+    key = jax.random.PRNGKey(3)
+    b, s, d = 1, 10, 4
+    log_a = -jax.nn.softplus(jax.random.normal(key, (b, s, d)))
+    gx = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+    h0 = jax.random.normal(jax.random.fold_in(key, 2), (b, d))
+    got = rglru._lru_scan(log_a, gx, h0)
+    want = rglru.rglru_reference(log_a, gx, h0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_block_decode_parity():
+    key = jax.random.PRNGKey(0)
+    p = rglru.init_rglru(key, RCFG)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (2, 13, RCFG.d_model))
+    y_full = rglru.rglru_block(TPL, RCFG, p, u)
+    _, cache = rglru.rglru_block(TPL, RCFG, p, u[:, :-1], return_cache=True)
+    y_dec, _ = rglru.rglru_decode_step(TPL, RCFG, p, u[:, -1:], cache)
+    np.testing.assert_allclose(
+        np.asarray(y_dec[:, 0]), np.asarray(y_full[:, -1]), atol=1e-3, rtol=1e-3
+    )
+
+
+def test_rglru_state_stays_bounded():
+    """sqrt(1-a^2) normalization: |h| must stay O(|x|) over long sequences."""
+    key = jax.random.PRNGKey(0)
+    p = rglru.init_rglru(key, RCFG)
+    u = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, RCFG.d_model))
+    _, cache = rglru.rglru_block(TPL, RCFG, p, u, return_cache=True)
+    assert float(jnp.abs(cache["h"]).max()) < 50.0

@@ -1,0 +1,92 @@
+"""The unified compute unit: backend equivalence + tiling legality/DSE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dse import default_block_for, explore_tpu_block
+from repro.core.template import TemplateConfig, Template, default_template
+from repro.core.tiling import MatmulBlock, TPU_V5E, clamp_block
+
+KEY = jax.random.PRNGKey(7)
+
+
+def test_backends_agree():
+    x = jax.random.normal(KEY, (48, 100)) * 0.1
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (100, 36)) * 0.1
+    ref = default_template("xla").matmul(x, w)
+    pal = default_template("pallas").matmul(x, w)
+    q16 = default_template("q16").matmul(x, w)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref), atol=1e-4, rtol=1e-4)
+    # fixed point: bounded quantization error
+    assert float(jnp.abs(q16 - ref).max()) < 0.01
+
+
+def test_leading_dims_flattened():
+    x = jax.random.normal(KEY, (2, 3, 5, 16))
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (16, 8))
+    tpl = default_template("xla")
+    out = tpl.matmul(x, w)
+    assert out.shape == (2, 3, 5, 8)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(x.reshape(-1, 16) @ w).reshape(2, 3, 5, 8),
+        atol=1e-4, rtol=1e-4,
+    )
+
+
+def test_conv2d_matches_lax():
+    x = jax.random.normal(KEY, (2, 10, 10, 3))
+    w = jax.random.normal(jax.random.fold_in(KEY, 3), (3, 3, 3, 8)) * 0.2
+    tpl = default_template("xla")
+    out = tpl.conv2d(x, w, stride=1, padding=1)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)], dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-3, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# tiling properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.integers(min_value=1, max_value=4096),
+    st.integers(min_value=1, max_value=4096),
+    st.integers(min_value=1, max_value=4096),
+)
+@settings(max_examples=100, deadline=None)
+def test_clamp_block_always_legal_alignment(m, n, k):
+    b = clamp_block(m, n, k, MatmulBlock(512, 512, 512))
+    assert b.bm % TPU_V5E.sublane == 0
+    assert b.bn % TPU_V5E.lane == 0
+    assert b.bk % TPU_V5E.lane == 0
+    assert b.vmem_bytes() <= MatmulBlock(512, 512, 512).vmem_bytes()
+
+
+@given(
+    st.integers(min_value=128, max_value=8192),
+    st.integers(min_value=128, max_value=8192),
+    st.integers(min_value=128, max_value=8192),
+)
+@settings(max_examples=30, deadline=None)
+def test_dse_block_fits_vmem(m, n, k):
+    blk = default_block_for(m, n, k)
+    assert blk.vmem_bytes() <= TPU_V5E.vmem_bytes
+    assert blk.aligned()
+
+
+def test_dse_prefers_higher_intensity():
+    ranked = explore_tpu_block(4096, 4096, 4096)
+    assert len(ranked) >= 2
+    scores = [s for _, s in ranked]
+    assert scores == sorted(scores, reverse=True)
+    best = ranked[0][0]
+    # the best block for a big square GEMM should be MXU-saturating
+    assert best.bm >= 256 and best.bn >= 256
+
+
+def test_mxu_efficiency_penalizes_misalignment():
+    good = MatmulBlock(256, 256, 256)
+    assert good.mxu_efficiency() == 1.0
