@@ -9,6 +9,9 @@ every kernel against its oracle at a reduced shape.
 """
 from __future__ import annotations
 
+import json
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,6 +76,46 @@ def correctness_pass() -> dict:
     return {"matmul_fp": mm, "matmul_q16_raw": q, "conv2d": cv, "flash_attention": fa}
 
 
+def _time_conv(route: str, x, w, reps: int = 3) -> float:
+    fn = lambda: jax.block_until_ready(
+        ops.conv2d(x, w, stride=1, padding=1, route=route, interpret=True)
+    )
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def im2col_vs_direct_row(n=1, hw=16, cin=16, cout=32, k=3, pad=1) -> dict:
+    """Structural + measured comparison of the two conv routes, as JSON.
+
+    Bytes are the HBM traffic of each route's GEMM stage (f32): im2col must
+    materialize the (N·Ho·Wo, Cin·K²) column matrix, the direct kernel
+    streams the image slab once. Wall time is interpret=True on CPU (it
+    measures the Pallas interpreter, not the MXU — useful only as a relative
+    trajectory between PRs; the structural bytes are the hardware story).
+    """
+    ho = wo = hw + 2 * pad - k + 1
+    m, nn, kk = n * ho * wo, cout, cin * k * k
+    im2col_bytes = (m * kk + kk * nn + m * nn) * 4
+    hp = hw + 2 * pad
+    direct_bytes = (n * hp * hp * cin + k * k * cin * cout + n * ho * wo * cout) * 4
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, hw, hw, cin)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, k, cin, cout)) * 0.3
+    return {
+        "bench": "conv_route_comparison",
+        "conv": {"n": n, "hw": hw, "cin": cin, "cout": cout, "k": k, "pad": pad},
+        "gemm_mnk": [m, nn, kk],
+        "im2col_gemm_bytes": im2col_bytes,
+        "direct_gemm_bytes": direct_bytes,
+        "bytes_ratio_im2col_over_direct": round(im2col_bytes / direct_bytes, 2),
+        "im2col_wall_s_interpret": round(_time_conv("im2col", x, w), 4),
+        "direct_wall_s_interpret": round(_time_conv("direct", x, w), 4),
+    }
+
+
 def main():
     print("== Kernel structural table (TPU v5e targets) ==")
     print(f"{'gemm':28s} {'block':>16s} {'vmem':>6s} {'mxu':>5s} "
@@ -84,6 +127,9 @@ def main():
     print("\n== Kernel correctness vs oracles (interpret=True) ==")
     for k, v in correctness_pass().items():
         print(f"  {k:18s} max|err| = {v:.2e}")
+    print("\n== im2col vs direct conv route (JSON, append-able trajectory) ==")
+    row = im2col_vs_direct_row()
+    print(json.dumps(row))
     return structural_rows()
 
 

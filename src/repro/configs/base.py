@@ -195,7 +195,7 @@ def all_configs() -> dict[str, ArchConfig]:
 
 
 def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
-    """Whether a dry-run cell runs (DESIGN.md §4 skip rules)."""
+    """Whether a dry-run cell runs (DESIGN.md §5 skip rules)."""
     if shape.name == "long_500k" and cfg.attends_full:
         return False, "full quadratic attention: 512k decode skipped per spec"
     return True, ""

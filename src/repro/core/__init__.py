@@ -1,6 +1,7 @@
 """Core of the reproduction: the paper's template-based accelerator design.
 
 - template.py      the unified compute unit (conv/FC/attention/MoE -> one GEMM op)
+- engine.py        execution-plan engine (plan cache, kernel routing, epilogues)
 - tiling.py        loop-tiling transformation (FPGA tiles + TPU BlockSpec tiles)
 - dse.py           design-space exploration over template parameters
 - fpga_model.py    analytic board model reproducing the paper's evaluation
@@ -9,10 +10,17 @@
 """
 from .quantization import Q2_14, QFormat, dequantize, fake_quant_fmt, qmatmul_real, qmatmul_ref, quantize
 from .template import Template, TemplateConfig, default_template
+from .engine import ConvPlan, Engine, GemmPlan, PlanCache, plan_cache_for, reset_plan_caches
 from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec
 from .roofline import RooflineReport, parse_collective_bytes, roofline_from_compiled
 
 __all__ = [
+    "ConvPlan",
+    "Engine",
+    "GemmPlan",
+    "PlanCache",
+    "plan_cache_for",
+    "reset_plan_caches",
     "Q2_14",
     "QFormat",
     "quantize",

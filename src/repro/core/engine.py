@@ -1,0 +1,391 @@
+"""The execution-plan engine: plan-then-execute for the unified compute unit.
+
+The paper chooses the compute-unit configuration *once* per network from the
+hardware specification, then runs every conv/FC layer through the resulting
+template.  This module is that split for the TPU plane:
+
+* :class:`PlanCache` — memoized DSE block selection.  ``default_block_for``
+  is an exhaustive grid search over (bm, bn, bk); the cache guarantees it
+  runs **once per GEMM shape per hardware spec**, with hit/miss counters so
+  tests (and ops dashboards) can assert no re-search happens on the hot path.
+  Caches are process-global per :class:`~repro.core.tiling.TpuSpec`, so every
+  Template/Engine instance targeting the same hardware shares one plan.
+
+* :class:`ConvPlan` / :class:`GemmPlan` — per-layer execution plans: which
+  kernel route a conv takes (direct Pallas conv vs im2col GEMM), the
+  output-channel tile τ for the direct route, and the pre-resolved Pallas
+  block for GEMM routes.
+
+* :class:`Engine` — executes plans.  It owns backend dispatch (xla / pallas
+  float / q16 fixed point), the conv routing decision (DESIGN.md §2), and
+  epilogue fusion (bias + ReLU + optional output quantization pushed into
+  the kernels' write-back, DESIGN.md §3).
+
+:class:`~repro.core.template.Template` delegates its ``matmul`` / ``linear``
+/ ``conv2d`` API here; networks (``models/cnn.py``) compile a
+``NetworkPlan`` once and reuse it every step.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import dse
+from .quantization import QFormat, dequantize, fake_quant_fmt, quantize
+from .tiling import MatmulBlock, TPU_V5E, TpuSpec, clamp_block
+
+__all__ = [
+    "PlanCache",
+    "ConvPlan",
+    "GemmPlan",
+    "Engine",
+    "plan_cache_for",
+    "register_plan_store",
+    "reset_plan_caches",
+]
+
+
+# ---------------------------------------------------------------------------
+# plan cache (memoized DSE)
+# ---------------------------------------------------------------------------
+
+
+class PlanCache:
+    """Memoized DSE block selection keyed by (m, n, k, hardware spec).
+
+    ``misses`` counts actual grid searches performed; ``hits`` counts lookups
+    served from the cache.  A repeated GEMM shape must cost exactly one
+    search for the lifetime of the cache.
+    """
+
+    def __init__(self) -> None:
+        self._blocks: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def block_for(self, m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> MatmulBlock:
+        key = (m, n, k, spec)
+        blk = self._blocks.get(key)
+        if blk is None:
+            self.misses += 1
+            blk = dse.default_block_for(m, n, k, spec)
+            self._blocks[key] = blk
+        else:
+            self.hits += 1
+        return blk
+
+    def __len__(self) -> int:
+        return len(self._blocks)
+
+    def clear(self) -> None:
+        self._blocks.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+_PLAN_CACHES: dict = {}
+#: Higher-level plan memos (e.g. models/cnn.py's NetworkPlan table) register
+#: themselves here so reset_plan_caches() empties them too.
+_EXTRA_PLAN_STORES: list = []
+
+
+def plan_cache_for(spec: TpuSpec = TPU_V5E) -> PlanCache:
+    """The process-global plan cache for a hardware spec."""
+    cache = _PLAN_CACHES.get(spec)
+    if cache is None:
+        cache = _PLAN_CACHES[spec] = PlanCache()
+    return cache
+
+
+def register_plan_store(store: dict) -> None:
+    """Register a derived plan memo to be emptied by :func:`reset_plan_caches`."""
+    _EXTRA_PLAN_STORES.append(store)
+
+
+def reset_plan_caches() -> None:
+    """Drop all cached plans (tests / reconfiguration).
+
+    Caches are cleared in place — live Engines keep their (now empty)
+    PlanCache object, so their stats stay consistent with the global one.
+    """
+    for cache in _PLAN_CACHES.values():
+        cache.clear()
+    for store in _EXTRA_PLAN_STORES:
+        store.clear()
+
+
+# ---------------------------------------------------------------------------
+# per-layer plans
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPlan:
+    """Pre-resolved plan for one GEMM shape."""
+
+    m: int
+    n: int
+    k: int
+    block: Optional[MatmulBlock]  # None for the xla backend
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvPlan:
+    """Pre-resolved plan for one conv layer.
+
+    route: "direct" (Pallas direct conv), "im2col" (GEMM fallback), or "xla".
+    tau: output-channel tile of the direct kernel (0 on GEMM routes).
+    block: Pallas block for the im2col GEMM (None otherwise).
+    gemm: the layer's equivalent (m, n, k) GEMM shape.
+    vmem_bytes: modeled VMEM working set of the chosen route's grid step.
+    """
+
+    route: str
+    stride: int
+    pad: int
+    tau: int
+    block: Optional[MatmulBlock]
+    gemm: tuple
+    vmem_bytes: int
+
+
+def _direct_conv_vmem(
+    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, tau: int,
+    in_bytes: int, acc_bytes: int = 4,
+) -> int:
+    """VMEM working set of one direct-conv grid step (double-buffered I/O)."""
+    x = hp * wp * cin * in_bytes * 2
+    w = kh * kw * cin * tau * in_bytes * 2
+    acc = ho * wo * tau * acc_bytes
+    out = ho * wo * tau * in_bytes * 2
+    return x + w + acc + out
+
+
+def _resolve_pad(padding, kh: int) -> int:
+    if isinstance(padding, int):
+        return padding
+    return {"SAME": kh // 2, "VALID": 0}[padding]
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Executes GEMM/conv plans for one template configuration.
+
+    Stateless w.r.t. numerics; holds the (shared) plan cache and per-engine
+    routing counters (``counters["conv_direct"]`` etc.) used by routing
+    assertions in tests.
+    """
+
+    def __init__(self, config=None, plan_cache: Optional[PlanCache] = None) -> None:
+        if config is None:
+            from .template import TemplateConfig
+
+            config = TemplateConfig()
+        self.config = config
+        # explicit `is not None`: an empty PlanCache is falsy (__len__ == 0)
+        # but still the caller's requested isolated cache
+        self.plan_cache = plan_cache if plan_cache is not None else plan_cache_for(config.hw)
+        self.counters: collections.Counter = collections.Counter()
+
+    # -- planning ------------------------------------------------------------
+
+    def block_for(self, m: int, n: int, k: int) -> MatmulBlock:
+        """The Pallas block for a GEMM shape: config override or cached DSE."""
+        if self.config.block is not None:
+            return clamp_block(m, n, k, self.config.block, self.config.hw)
+        return self.plan_cache.block_for(m, n, k, self.config.hw)
+
+    def plan_gemm(self, m: int, n: int, k: int) -> GemmPlan:
+        block = None if self.config.backend == "xla" else self.block_for(m, n, k)
+        return GemmPlan(m=m, n=n, k=k, block=block)
+
+    def plan_conv(
+        self, x_shape, w_shape, *, stride: int = 1, padding=0, route: Optional[str] = None
+    ) -> ConvPlan:
+        """Pick the kernel route for one conv layer (DESIGN.md §2).
+
+        Direct route: the padded image slab stays resident in VMEM and the
+        K² taps run as strided-slice GEMMs; τ is halved (≥ 8) until the
+        working set fits the VMEM budget.  If no τ fits, fall back to the
+        im2col GEMM with a plan-cached DSE block.  ``route`` forces a route
+        (tests / benchmarks).
+        """
+        n, h, wd, cin = x_shape
+        kh, kw, _, cout = w_shape
+        pad = _resolve_pad(padding, kh)
+        hp, wp = h + 2 * pad, wd + 2 * pad
+        ho = (hp - kh) // stride + 1
+        wo = (wp - kw) // stride + 1
+        gemm = (n * ho * wo, cout, cin * kh * kw)
+        backend = self.config.backend
+        if backend == "xla" or route == "xla":
+            return ConvPlan("xla", stride, pad, 0, None, gemm, 0)
+        if route != "im2col":
+            in_bytes = 2 if backend == "q16" else 4
+            tau = min(self.config.hw.lane, cout)
+            while True:
+                vmem = _direct_conv_vmem(hp, wp, cin, kh, kw, ho, wo, tau, in_bytes)
+                if vmem <= self.config.hw.vmem_bytes:
+                    return ConvPlan("direct", stride, pad, tau, None, gemm, vmem)
+                if tau <= 8:
+                    break
+                tau //= 2
+            if route == "direct":
+                raise ValueError(
+                    f"direct conv route forced but image slab {x_shape} does not "
+                    f"fit VMEM ({vmem} > {self.config.hw.vmem_bytes} bytes)"
+                )
+        block = self.block_for(*gemm)
+        return ConvPlan("im2col", stride, pad, 0, block, gemm, block.vmem_bytes())
+
+    # -- execution: GEMM -----------------------------------------------------
+
+    def _xla_epilogue(self, out, bias, relu, qout, dtype):
+        out = out.astype(dtype)
+        if bias is not None:
+            out = out + bias.astype(dtype)
+        if relu:
+            out = jax.nn.relu(out)
+        if qout is not None:
+            out = fake_quant_fmt(out, qout)  # STE: keeps the train path differentiable
+        return out
+
+    def matmul(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        bias: Optional[jax.Array] = None,
+        relu: bool = False,
+        qout: Optional[QFormat] = None,
+        plan: Optional[GemmPlan] = None,
+    ) -> jax.Array:
+        """``x @ w`` with fused epilogue; leading dims of x flatten into M.
+
+        On the q16 backend the output is inherently snapped to the backend's
+        ``config.qformat`` grid by the kernel's saturating write-back, so
+        ``qout`` is implied by the backend and ignored there (same rule as
+        :meth:`conv2d`).
+        """
+        if x.ndim == 1:
+            return self.matmul(x[None, :], w, bias=bias, relu=relu, qout=qout, plan=plan)[0]
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        n = w.shape[-1]
+        x2 = x.reshape(-1, k)
+        m = x2.shape[0]
+        backend = self.config.backend
+        if backend == "xla":
+            pet = self.config.accum_dtype or x.dtype
+            out = jnp.dot(x2, w.astype(x.dtype), preferred_element_type=pet)
+            out = self._xla_epilogue(out, bias, relu, qout, x.dtype)
+        elif backend == "pallas":
+            from repro.kernels import ops as kops
+
+            self.counters["gemm_pallas"] += 1
+            block = plan.block if plan is not None and plan.block is not None else self.block_for(m, n, k)
+            out = kops.matmul_fp(
+                x2, w, bias=bias, relu=relu, qout=qout, block=block,
+                interpret=self.config.interpret,
+            )
+        elif backend == "q16":
+            from repro.kernels import ops as kops
+
+            self.counters["gemm_q16"] += 1
+            fmt = self.config.qformat
+            block = plan.block if plan is not None and plan.block is not None else self.block_for(m, n, k)
+            qres = kops.matmul_q16(
+                quantize(x2, fmt),
+                quantize(w, fmt),
+                bias=None if bias is None else quantize(bias, fmt),
+                relu=relu,
+                fmt=fmt,
+                block=block,
+                interpret=self.config.interpret,
+            )
+            out = dequantize(qres, fmt, dtype=x.dtype)
+        else:  # pragma: no cover - config validation
+            raise ValueError(f"unknown backend {backend!r}")
+        return out.reshape(*lead, n)
+
+    def linear(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        b: Optional[jax.Array] = None,
+        *,
+        relu: bool = False,
+        qout: Optional[QFormat] = None,
+        plan: Optional[GemmPlan] = None,
+    ) -> jax.Array:
+        return self.matmul(x, w, bias=b, relu=relu, qout=qout, plan=plan)
+
+    # -- execution: conv -----------------------------------------------------
+
+    def conv2d(
+        self,
+        x: jax.Array,
+        w: jax.Array,
+        *,
+        stride: int = 1,
+        padding=0,
+        bias: Optional[jax.Array] = None,
+        relu: bool = False,
+        qout: Optional[QFormat] = None,
+        plan: Optional[ConvPlan] = None,
+    ) -> jax.Array:
+        """NHWC conv through the planned kernel route, epilogue fused.
+
+        x: (N, H, W, Cin), w: (K, K, Cin, Cout) -> (N, Ho, Wo, Cout).
+        On the q16 backend the output is inherently Q-gridded, so ``qout``
+        is implied by the backend's qformat.
+        """
+        from repro.kernels import ops as kops
+
+        kh, kw = w.shape[0], w.shape[1]
+        if plan is None:
+            plan = self.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
+        # The plan is the single source of geometry: stride *and* pad both
+        # come from it, so a mismatched plan cannot half-apply.
+        stride, pad = plan.stride, plan.pad
+        backend = self.config.backend
+        if plan.route == "xla":
+            self.counters["conv_xla"] += 1
+            xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0))) if pad else x
+            cols, ho, wo = kops.im2col(xp, kh, kw, stride)
+            pet = self.config.accum_dtype or x.dtype
+            out = jnp.dot(cols, kops.conv_gemm_weights(w).astype(x.dtype),
+                          preferred_element_type=pet)
+            out = self._xla_epilogue(out, bias, relu, qout, x.dtype)
+            return out.reshape(x.shape[0], ho, wo, -1)
+        self.counters["conv_direct" if plan.route == "direct" else "conv_im2col"] += 1
+        if backend == "pallas":
+            return kops.conv2d(
+                x, w, bias=bias, stride=stride, padding=pad, tau=plan.tau,
+                relu=relu, qout=qout, route=plan.route, block=plan.block,
+                interpret=self.config.interpret,
+            )
+        assert backend == "q16", backend
+        fmt = self.config.qformat
+        qres = kops.conv2d_q16(
+            quantize(x, fmt),
+            quantize(w, fmt),
+            bias=None if bias is None else quantize(bias, fmt),
+            stride=stride,
+            padding=pad,
+            tau=plan.tau,
+            relu=relu,
+            fmt=fmt,
+            route=plan.route,
+            block=plan.block,
+            interpret=self.config.interpret,
+        )
+        return dequantize(qres, fmt, dtype=x.dtype)

@@ -3,33 +3,38 @@ every GEMM-bearing layer routes through.
 
 The paper computes "convolutional and FC layers operations in vector
 multiplication on a single on-chip compute unit" (§I contributions).  Here
-:class:`Template` is that compute unit for TPU: conv (via im2col), FC,
-attention projections, MLP, MoE expert FFNs and vocab projections all call
+:class:`Template` is that compute unit for TPU: conv, FC, attention
+projections, MLP, MoE expert FFNs and vocab projections all call
 :meth:`Template.matmul`, which dispatches to one of three backends:
 
   * ``"xla"``    — `jnp.dot`; the lowering used inside pjit/shard_map programs
                    (the multi-pod dry-run plane).  XLA's own MXU tiling is the
                    production path on real TPUs for the distributed graph.
-  * ``"pallas"`` — the hand-tiled Pallas kernel (`kernels/matmul_fp.py`) with
-                   BlockSpec tiles chosen by the DSE (`core/dse.py`); the
-                   TPU-target artifact, validated interpret=True on CPU.
+  * ``"pallas"`` — the hand-tiled Pallas kernels (`kernels/matmul_fp.py`,
+                   `kernels/conv2d.py`) with BlockSpec tiles chosen by the
+                   DSE (`core/dse.py`); the TPU-target artifact, validated
+                   interpret=True on CPU.
   * ``"q16"``    — the paper's 16-bit Q2.14 fixed-point numerics
                    (`kernels/matmul_q16.py`), for paper-faithful inference.
 
-The template also carries the quantization format and the tile configuration,
-mirroring the paper's "pre-trained weights + target hardware specification
--> optimized template" flow.
+``Template`` is the stable API; the actual plan-then-execute machinery —
+memoized DSE block selection, direct-conv vs im2col routing, fused epilogues
+— lives in :class:`repro.core.engine.Engine` (DESIGN.md).  The template also
+carries the quantization format and the tile configuration, mirroring the
+paper's "pre-trained weights + target hardware specification -> optimized
+template" flow.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .quantization import QFormat, Q2_14, dequantize, quantize
-from .tiling import MatmulBlock, TPU_V5E, TpuSpec, clamp_block
+from .quantization import QFormat, Q2_14
+from .tiling import MatmulBlock, TPU_V5E, TpuSpec
 
 __all__ = ["Template", "TemplateConfig", "default_template"]
 
@@ -42,7 +47,7 @@ class TemplateConfig:
     'takes pre-trained weights ... and target hardware specification')."""
 
     backend: Backend = "xla"
-    block: Optional[MatmulBlock] = None  # None => DSE picks per-shape
+    block: Optional[MatmulBlock] = None  # None => DSE picks per-shape (plan-cached)
     qformat: QFormat = Q2_14
     hw: TpuSpec = TPU_V5E
     interpret: bool = True  # CPU container: Pallas kernels run interpreted
@@ -58,67 +63,35 @@ class TemplateConfig:
 class Template:
     config: TemplateConfig = TemplateConfig()
 
-    # -- tile selection ------------------------------------------------------
+    # -- the execution-plan engine -------------------------------------------
+
+    @functools.cached_property
+    def engine(self):
+        """The execution engine for this config (shares the global plan cache)."""
+        from .engine import Engine
+
+        return Engine(self.config)
 
     def block_for(self, m: int, n: int, k: int) -> MatmulBlock:
-        if self.config.block is not None:
-            return clamp_block(m, n, k, self.config.block, self.config.hw)
-        from .dse import default_block_for
-
-        return default_block_for(m, n, k, self.config.hw)
+        return self.engine.block_for(m, n, k)
 
     # -- the unified compute unit ---------------------------------------------
 
-    def matmul(self, x: jax.Array, w: jax.Array) -> jax.Array:
+    def matmul(self, x: jax.Array, w: jax.Array, **kw) -> jax.Array:
         """``x @ w`` where x: (..., k), w: (k, n).
 
         Leading dims of ``x`` are flattened into the GEMM M dimension — this
         is exactly the paper's unification: conv patches, tokens, and FC
-        neurons are all just rows of one matrix multiply.
+        neurons are all just rows of one matrix multiply.  Keyword args
+        (``bias``/``relu``/``qout``/``plan``) are fused-epilogue and plan
+        controls forwarded to the engine.
         """
-        if x.ndim == 1:
-            return self.matmul(x[None, :], w)[0]
-        lead = x.shape[:-1]
-        k = x.shape[-1]
-        n = w.shape[-1]
-        x2 = x.reshape(-1, k)
-        backend = self.config.backend
-        if backend == "xla":
-            pet = self.config.accum_dtype or x.dtype
-            out = jnp.dot(x2, w.astype(x.dtype), preferred_element_type=pet)
-            out = out.astype(x.dtype)
-        elif backend == "pallas":
-            from repro.kernels import ops as kops
+        return self.engine.matmul(x, w, **kw)
 
-            out = kops.matmul_fp(
-                x2,
-                w,
-                block=self.block_for(x2.shape[0], n, k),
-                interpret=self.config.interpret,
-            )
-        elif backend == "q16":
-            from repro.kernels import ops as kops
-
-            fmt = self.config.qformat
-            qout = kops.matmul_q16(
-                quantize(x2, fmt),
-                quantize(w, fmt),
-                fmt=fmt,
-                block=self.block_for(x2.shape[0], n, k),
-                interpret=self.config.interpret,
-            )
-            out = dequantize(qout, fmt, dtype=x.dtype)
-        else:  # pragma: no cover - config validation
-            raise ValueError(f"unknown backend {backend!r}")
-        return out.reshape(*lead, n)
-
-    def linear(self, x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
-        y = self.matmul(x, w)
-        if b is not None:
-            y = y + b.astype(y.dtype)
-        return y
-
-    # -- conv as matmul (paper's conv/FC unification) -------------------------
+    def linear(
+        self, x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None, **kw
+    ) -> jax.Array:
+        return self.engine.linear(x, w, b, **kw)
 
     def conv2d(
         self,
@@ -126,30 +99,15 @@ class Template:
         w: jax.Array,
         stride: int = 1,
         padding: str | int = 0,
+        **kw,
     ) -> jax.Array:
-        """NHWC conv via im2col + the unified matmul (paper Fig. 4).
+        """NHWC conv on the unified compute unit (paper Fig. 4).
 
         x: (N, H, W, Cin), w: (K, K, Cin, Cout) -> (N, Ho, Wo, Cout).
+        The engine routes to the direct Pallas conv kernel or the im2col
+        GEMM per its plan (DESIGN.md §2).
         """
-        n, h, wdt, cin = x.shape
-        kh, kw, _, cout = w.shape
-        pad = padding if isinstance(padding, int) else {"SAME": kh // 2, "VALID": 0}[padding]
-        if pad:
-            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-            h, wdt = h + 2 * pad, wdt + 2 * pad
-        ho = (h - kh) // stride + 1
-        wo = (wdt - kw) // stride + 1
-        # im2col: gather K x K patches -> rows of the GEMM
-        patches = jax.lax.conv_general_dilated_patches(
-            x.transpose(0, 3, 1, 2),  # NCHW for patch extraction
-            filter_shape=(kh, kw),
-            window_strides=(stride, stride),
-            padding="VALID",
-        )  # (N, Cin*K*K, Ho, Wo), features ordered (cin, kh, kw)
-        cols = patches.transpose(0, 2, 3, 1).reshape(n * ho * wo, cin * kh * kw)
-        wmat = w.transpose(2, 0, 1, 3).reshape(cin * kh * kw, cout)
-        out = self.matmul(cols, wmat)
-        return out.reshape(n, ho, wo, cout)
+        return self.engine.conv2d(x, w, stride=stride, padding=padding, **kw)
 
 
 def default_template(backend: Backend = "xla", **kw) -> Template:

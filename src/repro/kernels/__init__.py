@@ -2,10 +2,15 @@
 
 - matmul_fp.py        the unified mu x tau compute unit, float path
 - matmul_q16.py       the paper's Q2.14 fixed-point path
-- conv2d.py           conv-as-GEMM on the same unit (paper Fig. 4)
+- conv2d.py           direct conv (float + q16) on the same unit (paper Fig. 4)
 - flash_attention.py  streaming-softmax attention (prefill hot spot)
-- ops.py              public jit'd wrappers (GQA folding, fallbacks)
+- ops.py              public jit'd wrappers (im2col, GQA folding, routes)
 - ref.py              pure-jnp oracles
+
+All kernels fuse the layer epilogue (bias / ReLU / output quantization) into
+the accumulator write-back; route selection between the direct conv kernel
+and the im2col GEMM is the execution-plan engine's job (core/engine.py,
+DESIGN.md).
 
 Kernels target TPU (pallas_call + BlockSpec, MXU-aligned tiles) and are
 validated with interpret=True on CPU.

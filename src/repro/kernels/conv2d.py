@@ -1,4 +1,4 @@
-"""Direct convolution on the unified compute unit, as a Pallas kernel.
+"""Direct convolution on the unified compute unit, as Pallas kernels.
 
 The paper's key move is computing conv as vector multiplication on the same
 μ×τ unit used for FC layers (Fig. 4): for each spatial position and each of
@@ -8,11 +8,20 @@ TPU adaptation: instead of one (spatial, tap) position per cycle, each grid
 step keeps an (H, W, Cin) image slab in VMEM and runs K² *matmuls* of shape
 (Ho·Wo, Cin) x (Cin, τ) — the tap loop is unrolled (K is static) and each tap
 is an MXU-shaped GEMM, which is how the μ×τ wave generalizes to a 128×128
-systolic array.  Accumulation lives in a f32 VMEM scratch across taps.
+systolic array.  Accumulation lives in a f32/i32 VMEM scratch across taps.
 
-Grid: (N, Cout/τ).  Stride-1 only — strided taps need non-block-aligned
-windows; strided convs (AlexNet conv1) take the im2col + matmul_fp path in
-``ops.conv2d`` (documented fallback, same unified-GEMM semantics).
+Strided convs (AlexNet conv1) are handled *directly*: each tap reads a
+strided slice of the resident image slab (per-tap strided slicing), so the
+same kernel covers stride ∈ {1, 2, 4, ...} without falling back to im2col.
+The im2col + matmul fallback remains only for layers whose image slab does
+not fit the VMEM budget — the routing decision lives in ``core/engine.py``
+(DESIGN.md §2).
+
+Both kernels fuse the layer epilogue (bias add, ReLU, and — float path —
+output quantization) into the accumulator write-back, so activations never
+round-trip through HBM between the GEMM and the nonlinearity (DESIGN.md §3).
+
+Grid: (N, Cout/τ).
 """
 from __future__ import annotations
 
@@ -23,36 +32,78 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["conv2d_pallas"]
+from repro.core.quantization import QFormat, Q2_14
+
+__all__ = ["conv2d_pallas", "conv2d_q16_pallas"]
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh, kw, ho, wo):
-    # x_ref: (1, H, W, Cin) one padded image; w_ref: (kh*kw*Cin, tau)
-    # o_ref: (1, ho, wo, tau); acc_ref: (ho*wo, tau) f32
+def _tap_patch(img, i, j, ho, wo, stride):
+    """(H, W, Cin) slab -> (Ho*Wo, Cin) GEMM rows for tap (i, j).
+
+    Per-tap strided slicing: output position (r, c) reads input pixel
+    (i + stride*r, j + stride*c), so tap (i, j)'s rows are a strided window
+    of the resident slab.
+    """
+    patch = img[
+        i : i + stride * (ho - 1) + 1 : stride,
+        j : j + stride * (wo - 1) + 1 : stride,
+        :,
+    ]
+    return patch.reshape(ho * wo, img.shape[-1])
+
+
+def _conv_kernel(*refs, kh, kw, ho, wo, stride, relu, qout):
+    # refs: x (1, H, W, Cin) one padded image; w (kh*kw*Cin, tau); optional
+    # bias (1, tau) — only present when fused; out (1, ho, wo, tau);
+    # acc scratch (ho*wo, tau) f32.
+    if len(refs) == 5:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        b_ref = None
     acc_ref[...] = jnp.zeros_like(acc_ref)
     cin = x_ref.shape[3]
+    img = x_ref[0]
     for i in range(kh):
         for j in range(kw):
-            patch = x_ref[0, i : i + ho, j : j + wo, :]  # (ho, wo, cin)
-            lhs = patch.reshape(ho * wo, cin)
+            lhs = _tap_patch(img, i, j, ho, wo, stride)
             rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :]
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
-    o_ref[...] = acc_ref[...].reshape(1, ho, wo, -1).astype(o_ref.dtype)
+    # fused epilogue on the f32 accumulator (DESIGN.md §3)
+    acc = acc_ref[...]
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    if qout is not None:
+        acc = jnp.clip(jnp.round(acc * qout.scale) / qout.scale, qout.min_val, qout.max_val)
+    o_ref[...] = acc.reshape(1, ho, wo, -1).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("stride", "tau", "relu", "qout", "interpret")
+)
 def conv2d_pallas(
     x: jax.Array,
     w: jax.Array,
+    bias: jax.Array | None = None,
     *,
+    stride: int = 1,
     tau: int = 128,
+    relu: bool = False,
+    qout: QFormat | None = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """NHWC stride-1 VALID conv.  x: (N,H,W,Cin), w: (K,K,Cin,Cout)."""
+    """NHWC VALID conv, any stride.  x: (N,H,W,Cin), w: (K,K,Cin,Cout).
+
+    ``bias``: (Cout,) fused into the write-back; ``relu``/``qout``: fused
+    nonlinearity and (fake-)quantization to a Q format, applied after bias.
+    """
     n, h, wdt, cin = x.shape
     kh, kw, cin2, cout = w.shape
     assert cin == cin2
-    ho, wo = h - kh + 1, wdt - kw + 1
+    ho = (h - kh) // stride + 1
+    wo = (wdt - kw) // stride + 1
     tau = min(tau, cout)
     coutp = -(-cout // tau) * tau
     if coutp != cout:
@@ -60,18 +111,117 @@ def conv2d_pallas(
     # (kh*kw*cin, cout) with rows ordered (tap-major, cin-minor) to match the
     # kernel's per-tap row slices.
     wmat = w.reshape(kh * kw * cin, coutp)
+    operands = [x, wmat]
+    in_specs = [
+        pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
+        pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
+    ]
+    if bias is not None:
+        operands.append(
+            jnp.pad(bias.astype(jnp.float32), (0, coutp - cout)).reshape(1, coutp)
+        )
+        in_specs.append(pl.BlockSpec((1, tau), lambda b, t: (0, t)))
 
-    kernel = functools.partial(_conv_kernel, kh=kh, kw=kw, ho=ho, wo=wo)
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, ho=ho, wo=wo, stride=stride, relu=relu, qout=qout
+    )
     out = pl.pallas_call(
         kernel,
         grid=(n, coutp // tau),
-        in_specs=[
-            pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
-            pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, ho, wo, tau), lambda b, t: (b, 0, 0, t)),
         out_shape=jax.ShapeDtypeStruct((n, ho, wo, coutp), x.dtype),
         scratch_shapes=[pltpu.VMEM((ho * wo, tau), jnp.float32)],
         interpret=interpret,
-    )(x, wmat)
+    )(*operands)
+    return out[..., :cout]
+
+
+def _conv_q16_kernel(*refs, kh, kw, ho, wo, stride, relu, frac_bits, raw_min, raw_max):
+    # Same dataflow as _conv_kernel, fixed point: int16 taps accumulated in
+    # int32 (DESIGN.md §2), saturating round-shift write-back to Qm.n.
+    if len(refs) == 5:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        b_ref = None
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    cin = x_ref.shape[3]
+    img = x_ref[0]
+    for i in range(kh):
+        for j in range(kw):
+            lhs = _tap_patch(img, i, j, ho, wo, stride).astype(jnp.int32)
+            rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :].astype(jnp.int32)
+            acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.int32)
+    acc = acc_ref[...]
+    if b_ref is not None:
+        # bias is Qm.n raw at scale 2^n; the accumulator sits at 2^(2n), so
+        # the shifted add is bit-identical to adding raw bias post-shift.
+        acc = acc + (b_ref[...].astype(jnp.int32) << frac_bits)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    rounding = jnp.int32(1 << (frac_bits - 1))
+    shifted = (acc + rounding) >> frac_bits
+    out = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+    o_ref[...] = out.reshape(1, ho, wo, -1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "tau", "relu", "fmt", "interpret")
+)
+def conv2d_q16_pallas(
+    xq: jax.Array,
+    wq: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    tau: int = 128,
+    relu: bool = False,
+    fmt: QFormat = Q2_14,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fixed-point NHWC VALID conv, any stride.  All tensors int16 raw Qm.n."""
+    assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
+    n, h, wdt, cin = xq.shape
+    kh, kw, cin2, cout = wq.shape
+    assert cin == cin2
+    ho = (h - kh) // stride + 1
+    wo = (wdt - kw) // stride + 1
+    tau = min(tau, cout)
+    coutp = -(-cout // tau) * tau
+    if coutp != cout:
+        wq = jnp.pad(wq, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
+    wmat = wq.reshape(kh * kw * cin, coutp)
+    operands = [xq, wmat]
+    in_specs = [
+        pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
+        pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
+    ]
+    if bias is not None:
+        operands.append(
+            jnp.pad(bias.astype(jnp.int16), (0, coutp - cout)).reshape(1, coutp)
+        )
+        in_specs.append(pl.BlockSpec((1, tau), lambda b, t: (0, t)))
+
+    kernel = functools.partial(
+        _conv_q16_kernel,
+        kh=kh,
+        kw=kw,
+        ho=ho,
+        wo=wo,
+        stride=stride,
+        relu=relu,
+        frac_bits=fmt.frac_bits,
+        raw_min=fmt.raw_min,
+        raw_max=fmt.raw_max,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, coutp // tau),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, tau), lambda b, t: (b, 0, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, coutp), jnp.int16),
+        scratch_shapes=[pltpu.VMEM((ho * wo, tau), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
     return out[..., :cout]

@@ -20,7 +20,14 @@ from repro.core.tiling import MatmulBlock
 __all__ = ["matmul_q16_pallas"]
 
 
-def _qmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, frac_bits, raw_min, raw_max):
+def _qmm_kernel(*refs, frac_bits, raw_min, raw_max, relu):
+    # refs: (x, w[, bias], out, acc) — bias operand only present when fused.
+    if len(refs) == 5:
+        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
+    else:
+        x_ref, w_ref, o_ref, acc_ref = refs
+        b_ref = None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -33,22 +40,35 @@ def _qmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, frac_bits, raw_min, raw_max):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _write_back():
+        # bias is Qm.n raw at scale 2^n; the accumulator sits at 2^(2n), so
+        # the shifted add is bit-identical to adding raw bias post-shift
+        # (fused epilogue, DESIGN.md §3).
         acc = acc_ref[...]
+        if b_ref is not None:
+            acc = acc + (b_ref[...].astype(jnp.int32) << frac_bits)
+        if relu:
+            acc = jnp.maximum(acc, 0)
         rounding = jnp.int32(1 << (frac_bits - 1))
         shifted = (acc + rounding) >> frac_bits
         o_ref[...] = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fmt", "block", "relu", "interpret"))
 def matmul_q16_pallas(
     xq: jax.Array,
     wq: jax.Array,
+    bias: jax.Array | None = None,
     *,
     fmt: QFormat = Q2_14,
     block: MatmulBlock = MatmulBlock(256, 256, 256),
+    relu: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """xq: (m, k) int16 raw @ wq: (k, n) int16 raw -> (m, n) int16 raw."""
+    """xq: (m, k) int16 raw @ wq: (k, n) int16 raw -> (m, n) int16 raw.
+
+    ``bias``: (n,) int16 raw, fused into the write-back; ``relu``: fused on
+    the int32 accumulator before the saturating shift.
+    """
     assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
     m, k = xq.shape
     k2, n = wq.shape
@@ -60,23 +80,29 @@ def matmul_q16_pallas(
         xq = jnp.pad(xq, ((0, mp - m), (0, kp - k)))
     if (kp, np_) != (k, n):
         wq = jnp.pad(wq, ((0, kp - k), (0, np_ - n)))
+    operands = [xq, wq]
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    if bias is not None:
+        operands.append(jnp.pad(bias.astype(jnp.int16), (0, np_ - n)).reshape(1, np_))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
 
     kernel = functools.partial(
         _qmm_kernel,
         frac_bits=fmt.frac_bits,
         raw_min=fmt.raw_min,
         raw_max=fmt.raw_max,
+        relu=relu,
     )
     out = pl.pallas_call(
         kernel,
         grid=(mp // bm, np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int16),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(xq, wq)
+    )(*operands)
     return out[:m, :n]

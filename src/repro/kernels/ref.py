@@ -4,9 +4,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quantization import QFormat, Q2_14, qmatmul_ref as _qmatmul_core
+from repro.core.quantization import (
+    QFormat,
+    Q2_14,
+    qmatmul_ref as _qmatmul_core,
+    requantize_i32_to_i16,
+)
 
-__all__ = ["matmul_ref", "matmul_q16_ref", "conv2d_ref", "attention_ref"]
+__all__ = [
+    "matmul_ref",
+    "matmul_fused_ref",
+    "matmul_q16_ref",
+    "matmul_q16_fused_ref",
+    "conv2d_ref",
+    "conv2d_fused_ref",
+    "conv2d_q16_ref",
+    "attention_ref",
+]
+
+
+def _fake_quant(x: jax.Array, fmt: QFormat) -> jax.Array:
+    return jnp.clip(jnp.round(x * fmt.scale) / fmt.scale, fmt.min_val, fmt.max_val)
 
 
 def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -14,9 +32,47 @@ def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def matmul_fused_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    relu: bool = False,
+    qout: QFormat | None = None,
+) -> jax.Array:
+    """Oracle for the float GEMM with fused epilogue (bias -> ReLU -> quant)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if qout is not None:
+        y = _fake_quant(y, qout)
+    return y.astype(x.dtype)
+
+
 def matmul_q16_ref(xq: jax.Array, wq: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
     """int16 raw x int16 raw -> int16 raw (int32 accumulate, saturating shift)."""
     return _qmatmul_core(xq, wq, fmt)
+
+
+def matmul_q16_fused_ref(
+    xq: jax.Array,
+    wq: jax.Array,
+    bq: jax.Array | None = None,
+    *,
+    fmt: QFormat = Q2_14,
+    relu: bool = False,
+) -> jax.Array:
+    """Fixed-point GEMM oracle with fused epilogue on the int32 accumulator."""
+    acc = jnp.dot(
+        xq.astype(jnp.int32), wq.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    if bq is not None:
+        acc = acc + (bq.astype(jnp.int32) << fmt.frac_bits)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return requantize_i32_to_i16(acc, fmt)
 
 
 def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0) -> jax.Array:
@@ -31,6 +87,66 @@ def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1, padding: int = 0) ->
         padding=[(padding, padding), (padding, padding)],
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ).astype(x.dtype)
+
+
+def conv2d_fused_ref(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    relu: bool = False,
+    qout: QFormat | None = None,
+) -> jax.Array:
+    """Conv oracle with fused epilogue (bias -> ReLU -> fake-quant)."""
+    y = conv2d_ref(x, w, stride=stride, padding=padding).astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if qout is not None:
+        y = _fake_quant(y, qout)
+    return y.astype(x.dtype)
+
+
+def conv2d_q16_ref(
+    xq: jax.Array,
+    wq: jax.Array,
+    bq: jax.Array | None = None,
+    *,
+    fmt: QFormat = Q2_14,
+    stride: int = 1,
+    padding: int = 0,
+    relu: bool = False,
+) -> jax.Array:
+    """Fixed-point conv oracle: exact int32 tap-loop accumulation.
+
+    xq: (N,H,W,Cin) int16 raw, wq: (K,K,Cin,Cout) int16 raw -> int16 raw.
+    """
+    if padding:
+        xq = jnp.pad(xq, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    n, h, wd, cin = xq.shape
+    kh, kw, _, cout = wq.shape
+    ho = (h - kh) // stride + 1
+    wo = (wd - kw) // stride + 1
+    acc = jnp.zeros((n, ho, wo, cout), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = xq[
+                :,
+                i : i + stride * (ho - 1) + 1 : stride,
+                j : j + stride * (wo - 1) + 1 : stride,
+                :,
+            ].astype(jnp.int32)
+            acc = acc + jnp.einsum(
+                "nhwc,cd->nhwd", patch, wq[i, j].astype(jnp.int32)
+            )
+    if bq is not None:
+        acc = acc + (bq.astype(jnp.int32) << fmt.frac_bits)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return requantize_i32_to_i16(acc, fmt)
 
 
 def attention_ref(

@@ -46,6 +46,7 @@ def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas", "q16"])
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -65,12 +66,19 @@ def main(argv=None):
             jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
         ) * 0.1
 
+    # One template (and thus one execution engine + shared plan cache) for the
+    # whole serve session: prefill and every decode step reuse the same plan,
+    # so DSE block selection runs at most once per distinct GEMM shape.
+    tpl = default_template(args.backend)
     t0 = time.time()
-    gen = generate(cfg, params, tokens, ctx, gen=args.gen)
+    gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl)
     dt = time.time() - t0
-    print(f"[serve] arch={cfg.name} batch={args.prompts} "
+    pc = tpl.engine.plan_cache
+    print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
           f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
           f"in {dt:.2f}s ({args.prompts * args.gen / dt:.1f} tok/s)")
+    print(f"[serve] plan cache: {len(pc)} GEMM shapes planned, "
+          f"{pc.misses} DSE searches, {pc.hits} cache hits")
     print("[serve] sample generations:")
     for row in gen[: min(2, args.prompts)]:
         print("   ", row.tolist())

@@ -2,23 +2,40 @@
 unified compute unit.
 
 Per the paper's HW/SW partitioning: conv + FC layers run on the "PL plane"
-(the Template compute unit — im2col GEMM / Pallas kernels / Q2.14 fixed
-point), while pooling, ReLU placement, flatten and softmax are "PS plane"
-XLA ops.  ``quantized=True`` inference reproduces the deployed numerics:
-weights and activations fake- or fully-quantized to Q2.14 around every GEMM.
+(the Template compute unit — direct Pallas conv / im2col GEMM / Q2.14 fixed
+point), while pooling, flatten and softmax are "PS plane" XLA ops.  Bias and
+ReLU are fused into the compute unit's write-back (DESIGN.md §3).
+``quantized=True`` inference reproduces the deployed numerics: weights and
+activations fake- or fully-quantized to Q2.14 around every GEMM.
+
+Following the paper's plan-then-execute flow, :func:`plan_cnn` compiles the
+whole network's kernel routes and Pallas blocks **once** per (template
+config, spec, input shape) and every ``cnn_forward`` step reuses that plan —
+no per-call DSE, no per-call routing.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import ConvPlan, GemmPlan, register_plan_store
 from repro.core.quantization import Q2_14, QFormat, fake_quant_fmt
 from repro.core.template import Template
 
-__all__ = ["CNNSpec", "ALEXNET", "VGG16", "LENET", "CNN_ZOO", "init_cnn", "cnn_forward"]
+__all__ = [
+    "CNNSpec",
+    "ALEXNET",
+    "VGG16",
+    "LENET",
+    "CNN_ZOO",
+    "NetworkPlan",
+    "init_cnn",
+    "plan_cnn",
+    "cnn_forward",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +119,61 @@ def init_cnn(key, spec: CNNSpec, dtype=jnp.float32, scale: float = 0.5):
     return params
 
 
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """Compiled per-layer execution plan for one CNN (plan-then-execute)."""
+
+    convs: tuple  # ConvPlan per conv stage
+    fcs: tuple  # GemmPlan per FC layer
+
+
+_NETWORK_PLANS: dict = {}
+register_plan_store(_NETWORK_PLANS)
+
+
+def plan_cnn(
+    tpl: Template,
+    spec: CNNSpec,
+    input_shape: Sequence[int],
+    *,
+    force_route: Optional[str] = None,
+) -> NetworkPlan:
+    """Compile the network's kernel routes and Pallas blocks once.
+
+    Memoized per (template config, spec, input shape): repeated calls — and
+    every training/serving step — reuse the same plan object, so the DSE
+    grid search runs at most once per distinct GEMM shape in the network.
+    ``force_route`` overrides conv routing (e.g. "im2col" for A/B tests).
+    """
+    key = (tpl.config, spec, tuple(input_shape), force_route)
+    plan = _NETWORK_PLANS.get(key)
+    if plan is not None:
+        return plan
+    eng = tpl.engine
+    n, hh, ww, ch = input_shape
+    convs = []
+    for cout, k, stride, pad, pool in spec.convs:
+        cp = eng.plan_conv(
+            (n, hh, ww, ch), (k, k, ch, cout), stride=stride, padding=pad,
+            route=force_route,
+        )
+        convs.append(cp)
+        hh = (hh + 2 * cp.pad - k) // stride + 1
+        ww = (ww + 2 * cp.pad - k) // stride + 1
+        if pool:
+            hh //= pool
+            ww //= pool
+        ch = cout
+    fan = hh * ww * ch
+    fcs = []
+    for wd in (*spec.fcs, spec.n_classes):
+        fcs.append(eng.plan_gemm(n, wd, fan))
+        fan = wd
+    plan = NetworkPlan(convs=tuple(convs), fcs=tuple(fcs))
+    _NETWORK_PLANS[key] = plan
+    return plan
+
+
 def cnn_forward(
     tpl: Template,
     spec: CNNSpec,
@@ -110,24 +182,35 @@ def cnn_forward(
     *,
     quantized: bool = False,
     fmt: QFormat = Q2_14,
+    plan: Optional[NetworkPlan] = None,
 ) -> jax.Array:
     """x: (N, H, W, C) -> logits (N, n_classes).
 
     ``quantized``: Q2.14 both weights and activations around every GEMM
     (the deployed fixed-point numerics); the GEMM itself runs on whatever
-    backend ``tpl`` selects (XLA / Pallas float / Pallas q16).
+    backend ``tpl`` selects (XLA / Pallas float / Pallas q16).  Bias + ReLU
+    (and, when quantized, the post-activation Q2.14 snap) are fused into the
+    compute unit's write-back.  ``plan`` defaults to the memoized
+    :func:`plan_cnn` result for this (config, spec, input shape).
     """
+    plan = plan or plan_cnn(tpl, spec, x.shape)
     fq = (lambda a: fake_quant_fmt(a, fmt)) if quantized else (lambda a: a)
+    qo = fmt if quantized else None
     h = fq(x)
-    for p, (cout, k, stride, pad, pool) in zip(params["convs"], spec.convs):
-        h = tpl.conv2d(h, fq(p["w"]), stride=stride, padding=pad)
-        h = jax.nn.relu(h + fq(p["b"]))
-        h = fq(h)
+    for p, (cout, k, stride, pad, pool), cp in zip(
+        params["convs"], spec.convs, plan.convs
+    ):
+        h = tpl.conv2d(
+            h, fq(p["w"]), stride=stride, padding=pad,
+            bias=fq(p["b"]), relu=True, qout=qo, plan=cp,
+        )
         if pool:
             h = _maxpool(h, pool)
     h = h.reshape(h.shape[0], -1)
-    for i, p in enumerate(params["fcs"]):
-        h = tpl.linear(h, fq(p["w"]), fq(p["b"]))
-        if i < len(params["fcs"]) - 1:
-            h = fq(jax.nn.relu(h))
+    last = len(params["fcs"]) - 1
+    for i, (p, gp) in enumerate(zip(params["fcs"], plan.fcs)):
+        h = tpl.linear(
+            h, fq(p["w"]), fq(p["b"]),
+            relu=i < last, qout=qo if i < last else None, plan=gp,
+        )
     return h

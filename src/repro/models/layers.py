@@ -1,8 +1,11 @@
 """Shared neural-net layers (functional, pytree params, logical sharding).
 
 All GEMMs route through the Template compute unit (the paper's unification);
-norms/activations/rotations run on the "PS plane" (plain XLA), mirroring the
-paper's HW/SW partitioning.
+norms/rotations run on the "PS plane" (plain XLA), mirroring the paper's
+HW/SW partitioning.  Bias (and optionally ReLU) are fused into the compute
+unit's write-back via the execution-plan engine (DESIGN.md §3), and block
+selection for every dense GEMM is memoized in the engine's plan cache — the
+DSE grid search runs once per distinct shape per process.
 """
 from __future__ import annotations
 
@@ -35,8 +38,9 @@ def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.floa
     return p
 
 
-def dense(tpl: Template, p, x: jax.Array) -> jax.Array:
-    return tpl.linear(x, p["w"], p.get("b"))
+def dense(tpl: Template, p, x: jax.Array, *, relu: bool = False) -> jax.Array:
+    """Linear layer with the bias (and optional ReLU) fused into the kernel."""
+    return tpl.linear(x, p["w"], p.get("b"), relu=relu)
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -3,7 +3,7 @@
 The paper's conv/FC unification covers the *projections* of this block (they
 route through the Template compute unit); the SSD scan itself is not
 GEMM-shaped and runs on the "PS plane" (XLA) per the paper's HW/SW
-partitioning rule — documented in DESIGN.md §4.
+partitioning rule — documented in DESIGN.md §5.
 
 Two execution modes:
 

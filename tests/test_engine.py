@@ -1,0 +1,251 @@
+"""Execution-plan engine: direct-conv kernel (all strides), fused epilogues,
+routing decisions, and plan-cache memoization (DESIGN.md §1-§4)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dse
+from repro.core.engine import Engine, PlanCache, reset_plan_caches
+from repro.core.quantization import Q2_14, quantize
+from repro.core.template import TemplateConfig, default_template
+from repro.core.tiling import TPU_V5E
+from repro.models.cnn import CNN_ZOO, LENET, cnn_forward, init_cnn, plan_cnn
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _rand(shape, scale=0.3, salt=0):
+    return jax.random.normal(jax.random.fold_in(KEY, salt), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# direct conv kernel: stride x padding x backend sweeps vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("padding", [0, "SAME"])
+def test_direct_conv_float_vs_ref(stride, padding):
+    from repro.kernels import ref
+
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True))
+    x = _rand((2, 13, 13, 5), salt=1)
+    w = _rand((3, 3, 5, 8), salt=2)
+    b = _rand((8,), scale=0.1, salt=3)
+    plan = eng.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
+    assert plan.route == "direct"
+    out = eng.conv2d(x, w, stride=stride, padding=padding, bias=b, relu=True, plan=plan)
+    pad = 1 if padding == "SAME" else 0
+    want = ref.conv2d_fused_ref(x, w, b, stride=stride, padding=pad, relu=True)
+    assert out.shape == want.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("padding", [0, "SAME"])
+def test_direct_conv_q16_vs_ref(stride, padding):
+    from repro.kernels import ops, ref
+
+    x = _rand((1, 12, 12, 4), salt=4)
+    w = _rand((3, 3, 4, 8), salt=5)
+    b = _rand((8,), scale=0.1, salt=6)
+    xq, wq, bq = quantize(x), quantize(w), quantize(b)
+    pad = 1 if padding == "SAME" else 0
+    out = ops.conv2d_q16(
+        xq, wq, bias=bq, stride=stride, padding=pad, relu=True, interpret=True
+    )
+    want = ref.conv2d_q16_ref(xq, wq, bq, stride=stride, padding=pad, relu=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("route", ["direct", "im2col"])
+def test_conv_odd_cout_tau_padding(route):
+    """cout=10 with tau=8 forces the tau-padded output-channel path."""
+    from repro.kernels import ops, ref
+
+    x = _rand((1, 9, 9, 4), salt=7)
+    w = _rand((3, 3, 4, 10), salt=8)
+    out = ops.conv2d(x, w, stride=2, padding=1, tau=8, route=route, interpret=True)
+    want = ref.conv2d_ref(x, w, stride=2, padding=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_conv_q16_odd_cout_tau_padding():
+    from repro.kernels import ops, ref
+
+    x = _rand((1, 9, 9, 4), salt=9)
+    w = _rand((3, 3, 4, 10), salt=10)
+    xq, wq = quantize(x), quantize(w)
+    out = ops.conv2d_q16(xq, wq, stride=1, padding=1, tau=8, interpret=True)
+    want = ref.conv2d_q16_ref(xq, wq, stride=1, padding=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# fused GEMM epilogues
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_fp_fused_epilogue():
+    from repro.kernels import ops, ref
+
+    x = _rand((33, 47), salt=11)
+    w = _rand((47, 19), salt=12)
+    b = _rand((19,), scale=0.1, salt=13)
+    out = ops.matmul_fp(x, w, bias=b, relu=True, qout=Q2_14, interpret=True)
+    want = ref.matmul_fused_ref(x, w, b, relu=True, qout=Q2_14)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-6, rtol=1e-6)
+
+
+def test_matmul_q16_fused_epilogue():
+    from repro.kernels import ops, ref
+
+    x = _rand((24, 40), salt=14)
+    w = _rand((40, 16), salt=15)
+    b = _rand((16,), scale=0.1, salt=16)
+    xq, wq, bq = quantize(x), quantize(w), quantize(b)
+    out = ops.matmul_q16(xq, wq, bias=bq, relu=True, interpret=True)
+    want = ref.matmul_q16_fused_ref(xq, wq, bq, relu=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# plan cache: one DSE search per shape
+# ---------------------------------------------------------------------------
+
+
+def _count_searches(monkeypatch):
+    calls = []
+    real = dse.default_block_for
+
+    def counting(*a, **kw):
+        calls.append(a)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse, "default_block_for", counting)
+    return calls
+
+
+def test_plan_cache_memoizes_and_counts(monkeypatch):
+    calls = _count_searches(monkeypatch)
+    cache = PlanCache()
+    b1 = cache.block_for(256, 256, 256)
+    b2 = cache.block_for(256, 256, 256)
+    assert b1 == b2
+    assert len(calls) == 1, "second lookup must not re-run the DSE grid search"
+    assert cache.hits == 1 and cache.misses == 1 and len(cache) == 1
+    cache.block_for(512, 256, 256)
+    assert len(calls) == 2 and cache.misses == 2
+
+
+def test_template_matmul_single_dse_search(monkeypatch):
+    reset_plan_caches()
+    calls = _count_searches(monkeypatch)
+    tpl = default_template("pallas")
+    x = _rand((32, 48), salt=17)
+    w = _rand((48, 16), salt=18)
+    o1 = tpl.matmul(x, w)
+    o2 = tpl.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    assert len(calls) == 1
+    assert tpl.engine.plan_cache.hits >= 1
+    # a *different* template instance with the same config shares the plan
+    tpl2 = default_template("pallas")
+    tpl2.matmul(x, w)
+    assert len(calls) == 1
+    reset_plan_caches()
+
+
+# ---------------------------------------------------------------------------
+# routing: CNN zoo convs all take the direct kernel; VMEM overflow falls back
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "q16"])
+@pytest.mark.parametrize("net", ["lenet", "alexnet", "vgg16"])
+def test_cnn_zoo_routes_direct(backend, net):
+    """Stride-1 *and* strided (AlexNet conv1, stride 4) convs route direct."""
+    spec = CNN_ZOO[net]
+    tpl = default_template(backend)
+    plan = plan_cnn(tpl, spec, (1, spec.input_hw, spec.input_hw, spec.input_ch))
+    assert [cp.route for cp in plan.convs] == ["direct"] * len(spec.convs)
+    assert all(cp.vmem_bytes <= tpl.config.hw.vmem_bytes for cp in plan.convs)
+
+
+def test_conv_vmem_overflow_falls_back_to_im2col():
+    hw = dataclasses.replace(TPU_V5E, vmem_bytes=64 * 1024)
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True, hw=hw))
+    plan = eng.plan_conv((1, 64, 64, 32), (3, 3, 32, 64))
+    assert plan.route == "im2col"
+    assert plan.block is not None
+    with pytest.raises(ValueError):
+        eng.plan_conv((1, 64, 64, 32), (3, 3, 32, 64), route="direct")
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: direct path produces the same logits as the im2col path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["pallas", "q16"])
+def test_cnn_direct_matches_im2col(backend):
+    params = init_cnn(jax.random.PRNGKey(0), LENET, scale=0.3)
+    x = _rand((2, 32, 32, 1), scale=0.5, salt=19)
+    tpl = default_template(backend)
+    p_direct = plan_cnn(tpl, LENET, x.shape)
+    p_gemm = plan_cnn(tpl, LENET, x.shape, force_route="im2col")
+    assert all(cp.route == "direct" for cp in p_direct.convs)
+    assert all(cp.route == "im2col" for cp in p_gemm.convs)
+    f1 = cnn_forward(tpl, LENET, params, x, plan=p_direct)
+    f2 = cnn_forward(tpl, LENET, params, x, plan=p_gemm)
+    # float: 1e-4; q16: both paths are bit-exact int32 accumulations, allow
+    # one Q2.14 LSB of slack for the dequantized logits.
+    tol = 1e-4 if backend == "pallas" else Q2_14.resolution * 1.001
+    assert float(jnp.abs(f1 - f2).max()) <= tol
+    # routing assertion on the executed forward, not just the plan
+    assert tpl.engine.counters["conv_direct"] >= len(LENET.convs)
+
+
+def test_cnn_pallas_matches_xla_logits():
+    params = init_cnn(jax.random.PRNGKey(0), LENET, scale=0.3)
+    x = _rand((2, 32, 32, 1), scale=0.5, salt=20)
+    f_xla = cnn_forward(default_template("xla"), LENET, params, x)
+    f_pal = cnn_forward(default_template("pallas"), LENET, params, x)
+    np.testing.assert_allclose(
+        np.asarray(f_pal), np.asarray(f_xla), atol=1e-4, rtol=1e-4
+    )
+
+
+def test_plan_cnn_is_memoized():
+    tpl = default_template("pallas")
+    p1 = plan_cnn(tpl, LENET, (2, 32, 32, 1))
+    p2 = plan_cnn(tpl, LENET, (2, 32, 32, 1))
+    assert p1 is p2
+    reset_plan_caches()
+    p3 = plan_cnn(tpl, LENET, (2, 32, 32, 1))
+    assert p3 is not p1, "reset_plan_caches must also drop NetworkPlan memos"
+
+
+def test_plan_cnn_non_square_input():
+    """Plans must track H and W independently (and forward must still run)."""
+    spec = dataclasses.replace(LENET, convs=((6, 5, 1, 0, 2),), fcs=(16,))
+    tpl = default_template("pallas")
+    plan = plan_cnn(tpl, spec, (1, 32, 40, 1))
+    # conv: (32-5+1, 40-5+1) = (28, 36); pool 2 -> (14, 18)
+    assert plan.convs[0].gemm[0] == 28 * 36
+    assert plan.fcs[0].k == 14 * 18 * 6
+    # init_cnn assumes square inputs, so build params by hand from the plan
+    x = _rand((1, 32, 40, 1), scale=0.5, salt=21)
+    params = {
+        "convs": [{"w": _rand((5, 5, 1, 6), salt=24), "b": jnp.zeros((6,))}],
+        "fcs": [
+            {"w": _rand((plan.fcs[0].k, 16), salt=22), "b": jnp.zeros((16,))},
+            {"w": _rand((16, spec.n_classes), salt=23), "b": jnp.zeros((spec.n_classes,))},
+        ],
+    }
+    out = cnn_forward(tpl, spec, params, x, plan=plan)
+    assert out.shape == (1, spec.n_classes)
+    assert bool(jnp.isfinite(out).all())
