@@ -116,6 +116,51 @@ def im2col_vs_direct_row(n=1, hw=16, cin=16, cout=32, k=3, pad=1) -> dict:
     }
 
 
+def spatial_tiling_row() -> dict:
+    """Oracle row for the spatially-tiled direct conv route, as JSON.
+
+    Structural: the acceptance-criteria layer (3×3, Cin=64, 512×512) whose
+    untiled slab exceeds the v5e VMEM budget must plan ``direct`` with ≥ 2
+    spatial tiles and a modeled working set inside the budget.  Numeric: on
+    a shrunken budget the same planner decision is executed end-to-end and
+    checked against the im2col route (interpret=True).
+    """
+    import dataclasses
+
+    from repro.core.engine import Engine
+    from repro.core.dse import direct_conv_vmem
+    from repro.core.template import TemplateConfig
+
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True))
+    plan = eng.plan_conv((1, 512, 512, 64), (3, 3, 64, 64), stride=1, padding=1)
+    untiled = direct_conv_vmem(514, 514, 64, 3, 3, 512, 512, plan.tau or 64, 4)
+    # numeric differential at a budget that forces tiling on a small layer
+    hw = dataclasses.replace(TPU_V5E, vmem_bytes=256 * 1024)
+    eng_s = Engine(TemplateConfig(backend="pallas", interpret=True, hw=hw))
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (1, 32, 32, 32)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(key, 1), (3, 3, 32, 16)) * 0.3
+    p_dir = eng_s.plan_conv(x.shape, w.shape, stride=1, padding=1)
+    p_gem = eng_s.plan_conv(x.shape, w.shape, stride=1, padding=1, route="im2col")
+    err = float(jnp.abs(
+        eng_s.conv2d(x, w, stride=1, padding=1, plan=p_dir)
+        - eng_s.conv2d(x, w, stride=1, padding=1, plan=p_gem)
+    ).max())
+    return {
+        "bench": "spatial_tiled_direct_conv",
+        "layer": {"hw": 512, "cin": 64, "cout": 64, "k": 3, "pad": 1},
+        "route": plan.route,
+        "tau": plan.tau,
+        "tile_rows": plan.tile_rows,
+        "spatial_tiles": plan.spatial_tiles,
+        "vmem_MiB": round(plan.vmem_bytes / 2**20, 1),
+        "untiled_vmem_MiB": round(untiled / 2**20, 1),
+        "budget_MiB": round(TPU_V5E.vmem_bytes / 2**20, 1),
+        "small_layer_tiles": p_dir.spatial_tiles,
+        "tiled_vs_im2col_max_err": err,
+    }
+
+
 def main():
     print("== Kernel structural table (TPU v5e targets) ==")
     print(f"{'gemm':28s} {'block':>16s} {'vmem':>6s} {'mxu':>5s} "
@@ -130,6 +175,18 @@ def main():
     print("\n== im2col vs direct conv route (JSON, append-able trajectory) ==")
     row = im2col_vs_direct_row()
     print(json.dumps(row))
+    print("\n== spatial-tiled direct conv (JSON, append-able trajectory) ==")
+    tiled = spatial_tiling_row()
+    print(json.dumps(tiled))
+    assert tiled["route"] == "direct" and tiled["spatial_tiles"] >= 2
+    assert tiled["tiled_vs_im2col_max_err"] < 1e-4
+    print("\n== VGG16 @ 512x512 network plan (route/tile regressions diff here) ==")
+    from repro.core.template import default_template
+    from repro.models.cnn import CNN_ZOO, plan_cnn
+
+    net = plan_cnn(default_template("pallas"), CNN_ZOO["vgg16"], (1, 512, 512, 3))
+    for line in net.describe():
+        print("  " + line)
     return structural_rows()
 
 

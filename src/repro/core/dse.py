@@ -13,21 +13,32 @@ analytic and exhaustive over a quantized grid:
   within the VMEM budget and rank by a roofline score (MXU occupancy ×
   min(1, intensity/ridge)).  This picks the compute-unit configuration the
   Pallas kernels use.
+
+* :func:`explore_conv_spatial` — TPU plane, direct conv: enumerate the
+  direct-conv kernel's (τ, tile_rows) grid — output-channel tile × spatial
+  output-row tile (the paper's 𝒯 tile) — inside the VMEM working-set model
+  (:func:`direct_conv_vmem`) and rank by a compute-unit utilization score.
+  This is what lets oversized layers (ZynqNet-style large early-layer
+  feature maps) stay on the direct route instead of spilling to im2col.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 from .fpga_model import Board, LayerSpec, TemplateInstance, evaluate_network
-from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec
+from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec, ceil_div
 
 __all__ = [
     "DseResult",
+    "ConvTileChoice",
     "explore_board",
     "explore_tpu_block",
+    "explore_conv_spatial",
     "default_block_for",
+    "default_conv_tile_for",
+    "direct_conv_vmem",
 ]
 
 
@@ -130,3 +141,163 @@ def default_block_for(m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> Matmul
     from .tiling import clamp_block
 
     return clamp_block(m, n, k, MatmulBlock(128, 128, 128), spec)
+
+
+# ---------------------------------------------------------------------------
+# TPU plane: direct-conv spatial tiling (the paper's 𝒯 tile on the row axis)
+# ---------------------------------------------------------------------------
+
+
+def direct_conv_vmem(
+    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, tau: int,
+    in_bytes: int, acc_bytes: int = 4, *, stride: int = 1, tile_rows: int = 0,
+) -> int:
+    """VMEM working set of one direct-conv grid step (double-buffered I/O).
+
+    Untiled (``tile_rows`` 0 or ≥ Ho): the whole padded image slab is
+    resident.  Spatially tiled: each step holds *two* adjacent
+    ``stride·tile_rows``-row input blocks — the tile plus its successor,
+    which supplies the ``kh - stride`` halo rows (``kernels/conv2d.py``) —
+    plus the same-sized concatenated copy the kernel materializes to stitch
+    them, and the accumulator/output shrink from Ho to tile_rows output
+    rows.
+    """
+    th = tile_rows if 0 < tile_rows < ho else ho
+    if th < ho:
+        rows = 2 * stride * th
+        # two double-buffered input blocks + the in-kernel concat buffer
+        x = rows * wp * cin * in_bytes * 3
+    else:
+        x = hp * wp * cin * in_bytes * 2
+    w = kh * kw * cin * tau * in_bytes * 2
+    acc = th * wo * tau * acc_bytes
+    out = th * wo * tau * in_bytes * 2
+    return x + w + acc + out
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTileChoice:
+    """One legal direct-conv compute-unit configuration (τ, spatial tile)."""
+
+    tau: int
+    tile_rows: int  # output rows per grid step (== ho when untiled)
+    spatial_tiles: int  # ceil(ho / tile_rows)
+    vmem_bytes: int
+    score: float
+
+
+def _conv_tile_score(
+    tau: int, th: int, hp: int, wp: int, cin: int, kh: int, kw: int,
+    ho: int, wo: int, cout: int, stride: int, spec: TpuSpec,
+) -> float:
+    """Compute-unit utilization of one (τ, tile_rows) configuration.
+
+    Traffic-based: ideal HBM bytes (image + weights + output each touched
+    once) over the bytes the grid actually moves — the TPU analogue of the
+    paper's ceil(p/μ)·ceil(q/τ) invocation-waste terms:
+
+    * the image is re-streamed once per τ-way (ceil(cout/τ) output-channel
+      tiles), and the two-block halo scheme holds ~2× the tile's rows,
+    * the τ-wide weight slab is re-fetched once per spatial tile,
+    * padded output rows (tiles·th ≥ ho) and padded channels (coutp ≥ cout)
+      are wasted write-back traffic,
+
+    times the MXU row occupancy of the per-step (th·wo, cin) GEMM.  Untiled
+    pays no halo or weight refetch, so it wins whenever it fits; among tiled
+    configs the score trades τ-width (image refetch) against tile height
+    (weight refetch).
+    """
+    coutp = ceil_div(cout, tau) * tau
+    ways = coutp // tau
+    tiles = ceil_div(ho, th)
+    if th >= ho:
+        x_traffic = ways * hp * wp * cin
+    else:
+        x_traffic = ways * tiles * 2 * stride * th * wp * cin
+    w_traffic = tiles * kh * kw * cin * coutp
+    out_traffic = tiles * th * wo * coutp
+    ideal = hp * wp * cin + kh * kw * cin * cout + ho * wo * cout
+    rows = th * wo
+    m_eff = rows / (ceil_div(rows, spec.mxu_dim) * spec.mxu_dim)
+    return ideal / (x_traffic + w_traffic + out_traffic) * m_eff
+
+
+def explore_conv_spatial(
+    hp: int,
+    wp: int,
+    cin: int,
+    kh: int,
+    kw: int,
+    ho: int,
+    wo: int,
+    cout: int,
+    stride: int,
+    spec: TpuSpec = TPU_V5E,
+    in_bytes: int = 4,
+    top: int = 5,
+) -> list[ConvTileChoice]:
+    """Enumerate legal (τ, tile_rows) direct-conv configs; rank by score.
+
+    τ ladder: min(lane, cout) halved down to 8 (same ladder the engine used
+    pre-tiling).  tile_rows ladder: Ho halved down to the smallest tile whose
+    input block still covers the tap window (stride·tile_rows ≥ kh, the
+    two-block halo legality bound).
+    """
+    tau0 = min(spec.lane, cout)
+    taus = []
+    t = tau0
+    while True:
+        taus.append(t)
+        if t <= 8:
+            break
+        t //= 2
+    th_min = max(1, ceil_div(kh, stride))
+    ths = []
+    t = ho
+    while t > th_min:
+        ths.append(t)
+        t = ceil_div(t, 2)
+    ths.append(max(th_min, min(t, ho)))
+    out: list[ConvTileChoice] = []
+    for tau, th in itertools.product(taus, dict.fromkeys(ths)):
+        if th < ho and stride * th < kh:
+            continue  # halo block cannot cover the tap window
+        vmem = direct_conv_vmem(
+            hp, wp, cin, kh, kw, ho, wo, tau, in_bytes, stride=stride, tile_rows=th
+        )
+        if vmem > spec.vmem_bytes:
+            continue
+        score = _conv_tile_score(
+            tau, th, hp, wp, cin, kh, kw, ho, wo, cout, stride, spec
+        )
+        out.append(
+            ConvTileChoice(
+                tau=tau,
+                tile_rows=th,
+                spatial_tiles=ceil_div(ho, th),
+                vmem_bytes=vmem,
+                score=score,
+            )
+        )
+    out.sort(key=lambda c: (-c.score, -c.tau, -c.tile_rows))
+    return out[:top]
+
+
+def default_conv_tile_for(
+    hp: int,
+    wp: int,
+    cin: int,
+    kh: int,
+    kw: int,
+    ho: int,
+    wo: int,
+    cout: int,
+    stride: int,
+    spec: TpuSpec = TPU_V5E,
+    in_bytes: int = 4,
+) -> Optional[ConvTileChoice]:
+    """Best-scoring legal direct-conv config, or None (→ im2col fallback)."""
+    ranked = explore_conv_spatial(
+        hp, wp, cin, kh, kw, ho, wo, cout, stride, spec, in_bytes
+    )
+    return ranked[0] if ranked else None

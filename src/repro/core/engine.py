@@ -13,8 +13,8 @@ template.  This module is that split for the TPU plane:
 
 * :class:`ConvPlan` / :class:`GemmPlan` — per-layer execution plans: which
   kernel route a conv takes (direct Pallas conv vs im2col GEMM), the
-  output-channel tile τ for the direct route, and the pre-resolved Pallas
-  block for GEMM routes.
+  output-channel tile τ and spatial row tile of the direct route, and the
+  pre-resolved Pallas block for GEMM routes.
 
 * :class:`Engine` — executes plans.  It owns backend dispatch (xla / pallas
   float / q16 fixed point), the conv routing decision (DESIGN.md §2), and
@@ -55,15 +55,18 @@ __all__ = [
 
 
 class PlanCache:
-    """Memoized DSE block selection keyed by (m, n, k, hardware spec).
+    """Memoized DSE selection: GEMM blocks and direct-conv tile configs.
 
-    ``misses`` counts actual grid searches performed; ``hits`` counts lookups
-    served from the cache.  A repeated GEMM shape must cost exactly one
-    search for the lifetime of the cache.
+    GEMM blocks are keyed by (m, n, k, hardware spec); direct-conv
+    (τ, tile_rows) choices by the layer geometry + spec.  ``misses`` counts
+    actual grid searches performed (either kind); ``hits`` counts lookups
+    served from the cache.  A repeated shape must cost exactly one search
+    for the lifetime of the cache.
     """
 
     def __init__(self) -> None:
         self._blocks: dict = {}
+        self._conv_tiles: dict = {}
         self.hits = 0
         self.misses = 0
 
@@ -78,11 +81,29 @@ class PlanCache:
             self.hits += 1
         return blk
 
+    def conv_tile_for(
+        self,
+        hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int,
+        cout: int, stride: int, in_bytes: int, spec: TpuSpec = TPU_V5E,
+    ):
+        """Memoized :func:`dse.default_conv_tile_for` (None = no fit cached)."""
+        key = (hp, wp, cin, kh, kw, ho, wo, cout, stride, in_bytes, spec)
+        if key in self._conv_tiles:
+            self.hits += 1
+            return self._conv_tiles[key]
+        self.misses += 1
+        choice = dse.default_conv_tile_for(
+            hp, wp, cin, kh, kw, ho, wo, cout, stride, spec, in_bytes
+        )
+        self._conv_tiles[key] = choice
+        return choice
+
     def __len__(self) -> int:
-        return len(self._blocks)
+        return len(self._blocks) + len(self._conv_tiles)
 
     def clear(self) -> None:
         self._blocks.clear()
+        self._conv_tiles.clear()
         self.hits = 0
         self.misses = 0
 
@@ -142,6 +163,8 @@ class ConvPlan:
     block: Pallas block for the im2col GEMM (None otherwise).
     gemm: the layer's equivalent (m, n, k) GEMM shape.
     vmem_bytes: modeled VMEM working set of the chosen route's grid step.
+    tile_rows: direct-route output rows per grid step (0 = whole image).
+    spatial_tiles: ceil(Ho / tile_rows) — grid steps along the row axis.
     """
 
     route: str
@@ -151,18 +174,14 @@ class ConvPlan:
     block: Optional[MatmulBlock]
     gemm: tuple
     vmem_bytes: int
+    tile_rows: int = 0
+    spatial_tiles: int = 1
 
 
-def _direct_conv_vmem(
-    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, tau: int,
-    in_bytes: int, acc_bytes: int = 4,
-) -> int:
-    """VMEM working set of one direct-conv grid step (double-buffered I/O)."""
-    x = hp * wp * cin * in_bytes * 2
-    w = kh * kw * cin * tau * in_bytes * 2
-    acc = ho * wo * tau * acc_bytes
-    out = ho * wo * tau * in_bytes * 2
-    return x + w + acc + out
+#: VMEM working-set model of one direct-conv grid step — lives with the rest
+#: of the DSE scoring in core/dse.py; re-exported here because the engine is
+#: its primary consumer (DESIGN.md §2).
+_direct_conv_vmem = dse.direct_conv_vmem
 
 
 def _resolve_pad(padding, kh: int) -> int:
@@ -212,11 +231,13 @@ class Engine:
     ) -> ConvPlan:
         """Pick the kernel route for one conv layer (DESIGN.md §2).
 
-        Direct route: the padded image slab stays resident in VMEM and the
-        K² taps run as strided-slice GEMMs; τ is halved (≥ 8) until the
-        working set fits the VMEM budget.  If no τ fits, fall back to the
-        im2col GEMM with a plan-cached DSE block.  ``route`` forces a route
-        (tests / benchmarks).
+        Direct route: the DSE (``dse.explore_conv_spatial``, memoized in the
+        plan cache) picks the (τ, tile_rows) compute-unit config — whole-slab
+        when the padded image fits the VMEM budget, an output-row spatial
+        tiling with two-block halo reads when it doesn't.  Only when *no*
+        (τ, tile_rows) fits does the layer fall back to the im2col GEMM with
+        a plan-cached DSE block.  ``route`` forces a route (tests /
+        benchmarks).
         """
         n, h, wd, cin = x_shape
         kh, kw, _, cout = w_shape
@@ -230,18 +251,20 @@ class Engine:
             return ConvPlan("xla", stride, pad, 0, None, gemm, 0)
         if route != "im2col":
             in_bytes = 2 if backend == "q16" else 4
-            tau = min(self.config.hw.lane, cout)
-            while True:
-                vmem = _direct_conv_vmem(hp, wp, cin, kh, kw, ho, wo, tau, in_bytes)
-                if vmem <= self.config.hw.vmem_bytes:
-                    return ConvPlan("direct", stride, pad, tau, None, gemm, vmem)
-                if tau <= 8:
-                    break
-                tau //= 2
+            choice = self.plan_cache.conv_tile_for(
+                hp, wp, cin, kh, kw, ho, wo, cout, stride, in_bytes, self.config.hw
+            )
+            if choice is not None:
+                tile_rows = 0 if choice.tile_rows >= ho else choice.tile_rows
+                return ConvPlan(
+                    "direct", stride, pad, choice.tau, None, gemm,
+                    choice.vmem_bytes, tile_rows, choice.spatial_tiles,
+                )
             if route == "direct":
                 raise ValueError(
-                    f"direct conv route forced but image slab {x_shape} does not "
-                    f"fit VMEM ({vmem} > {self.config.hw.vmem_bytes} bytes)"
+                    f"direct conv route forced but no (tau, tile_rows) config "
+                    f"for image slab {x_shape} fits VMEM "
+                    f"({self.config.hw.vmem_bytes} bytes)"
                 )
         block = self.block_for(*gemm)
         return ConvPlan("im2col", stride, pad, 0, block, gemm, block.vmem_bytes())
@@ -371,7 +394,7 @@ class Engine:
             return kops.conv2d(
                 x, w, bias=bias, stride=stride, padding=pad, tau=plan.tau,
                 relu=relu, qout=qout, route=plan.route, block=plan.block,
-                interpret=self.config.interpret,
+                tile_rows=plan.tile_rows, interpret=self.config.interpret,
             )
         assert backend == "q16", backend
         fmt = self.config.qformat
@@ -386,6 +409,7 @@ class Engine:
             fmt=fmt,
             route=plan.route,
             block=plan.block,
+            tile_rows=plan.tile_rows,
             interpret=self.config.interpret,
         )
         return dequantize(qres, fmt, dtype=x.dtype)

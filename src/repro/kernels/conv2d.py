@@ -5,23 +5,31 @@ The paper's key move is computing conv as vector multiplication on the same
 the K² taps, a μ-wide input-channel vector is dotted with a μ×τ weight slab.
 
 TPU adaptation: instead of one (spatial, tap) position per cycle, each grid
-step keeps an (H, W, Cin) image slab in VMEM and runs K² *matmuls* of shape
-(Ho·Wo, Cin) x (Cin, τ) — the tap loop is unrolled (K is static) and each tap
-is an MXU-shaped GEMM, which is how the μ×τ wave generalizes to a 128×128
+step keeps an image slab in VMEM and runs K² *matmuls* of shape
+(rows·Wo, Cin) x (Cin, τ) — the tap loop is unrolled (K is static) and each
+tap is an MXU-shaped GEMM, which is how the μ×τ wave generalizes to a 128×128
 systolic array.  Accumulation lives in a f32/i32 VMEM scratch across taps.
 
 Strided convs (AlexNet conv1) are handled *directly*: each tap reads a
 strided slice of the resident image slab (per-tap strided slicing), so the
 same kernel covers stride ∈ {1, 2, 4, ...} without falling back to im2col.
-The im2col + matmul fallback remains only for layers whose image slab does
-not fit the VMEM budget — the routing decision lives in ``core/engine.py``
-(DESIGN.md §2).
+
+Spatial tiling (the paper's 𝒯/ℭ loop tiles, §III.B): when the whole image
+slab exceeds the VMEM budget, ``tile_rows`` adds an output-row tile axis to
+the grid.  Each grid step computes ``tile_rows`` output rows from a
+``stride·tile_rows``-row input block plus its *successor* block — the second
+block supplies the ``kh - stride`` halo rows a tap window reads past the
+tile boundary, while both operands stay ordinary blocked BlockSpecs (no
+unaligned slicing).  Legality: ``stride·tile_rows ≥ kh`` so one successor
+block always covers the halo.  The im2col + matmul fallback remains only for
+layers where no (τ, tile_rows) fits the VMEM budget — the routing decision
+lives in ``core/engine.py`` (DESIGN.md §2).
 
 Both kernels fuse the layer epilogue (bias add, ReLU, and — float path —
 output quantization) into the accumulator write-back, so activations never
 round-trip through HBM between the GEMM and the nonlinearity (DESIGN.md §3).
 
-Grid: (N, Cout/τ).
+Grid: (N, ceil(Ho/tile_rows), Cout/τ); the middle axis is 1 when untiled.
 """
 from __future__ import annotations
 
@@ -37,36 +45,48 @@ from repro.core.quantization import QFormat, Q2_14
 __all__ = ["conv2d_pallas", "conv2d_q16_pallas"]
 
 
-def _tap_patch(img, i, j, ho, wo, stride):
-    """(H, W, Cin) slab -> (Ho*Wo, Cin) GEMM rows for tap (i, j).
+def _tap_patch(img, i, j, rows, wo, stride):
+    """Image slab -> (rows*Wo, Cin) GEMM rows for tap (i, j).
 
     Per-tap strided slicing: output position (r, c) reads input pixel
     (i + stride*r, j + stride*c), so tap (i, j)'s rows are a strided window
     of the resident slab.
     """
     patch = img[
-        i : i + stride * (ho - 1) + 1 : stride,
+        i : i + stride * (rows - 1) + 1 : stride,
         j : j + stride * (wo - 1) + 1 : stride,
         :,
     ]
-    return patch.reshape(ho * wo, img.shape[-1])
+    return patch.reshape(rows * wo, img.shape[-1])
 
 
-def _conv_kernel(*refs, kh, kw, ho, wo, stride, relu, qout):
-    # refs: x (1, H, W, Cin) one padded image; w (kh*kw*Cin, tau); optional
-    # bias (1, tau) — only present when fused; out (1, ho, wo, tau);
-    # acc scratch (ho*wo, tau) f32.
-    if len(refs) == 5:
-        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref = refs
-        b_ref = None
+def _split_refs(refs, halo, fused_bias):
+    """refs -> (x1, x2 | None, w, bias | None, out, acc)."""
+    refs = list(refs)
+    x1 = refs.pop(0)
+    x2 = refs.pop(0) if halo else None
+    w = refs.pop(0)
+    b = refs.pop(0) if fused_bias else None
+    o, acc = refs
+    return x1, x2, w, b, o, acc
+
+
+def _conv_kernel(*refs, kh, kw, th, wo, stride, relu, qout, halo, fused_bias):
+    # refs: x1 (1, rows, Wp, Cin) image block; x2 same-shape successor block
+    # (halo rows; only when spatially tiled); w (kh*kw*Cin, tau); optional
+    # bias (1, tau); out (1, th, wo, tau); acc scratch (th*wo, tau) f32.
+    x1_ref, x2_ref, w_ref, b_ref, o_ref, acc_ref = _split_refs(refs, halo, fused_bias)
     acc_ref[...] = jnp.zeros_like(acc_ref)
-    cin = x_ref.shape[3]
-    img = x_ref[0]
+    cin = x1_ref.shape[3]
+    img = x1_ref[0]
+    if halo:
+        # the tap window of the last output row in this tile reads up to
+        # stride*(th-1) + kh - 1 < 2*stride*th rows (stride*th >= kh), so
+        # the pair of adjacent row blocks always covers it.
+        img = jnp.concatenate([img, x2_ref[0]], axis=0)
     for i in range(kh):
         for j in range(kw):
-            lhs = _tap_patch(img, i, j, ho, wo, stride)
+            lhs = _tap_patch(img, i, j, th, wo, stride)
             rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :]
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
     # fused epilogue on the f32 accumulator (DESIGN.md §3)
@@ -77,11 +97,44 @@ def _conv_kernel(*refs, kh, kw, ho, wo, stride, relu, qout):
         acc = jnp.maximum(acc, 0.0)
     if qout is not None:
         acc = jnp.clip(jnp.round(acc * qout.scale) / qout.scale, qout.min_val, qout.max_val)
-    o_ref[...] = acc.reshape(1, ho, wo, -1).astype(o_ref.dtype)
+    o_ref[...] = acc.reshape(1, th, wo, -1).astype(o_ref.dtype)
+
+
+def _conv_grid(x, kh, stride, ho, tile_rows):
+    """Shared grid/BlockSpec geometry for both conv kernels.
+
+    Returns (x, x_specs, grid_tiles, th, halo): ``x`` zero-row-padded so the
+    successor halo block of the last tile is always in range, ``th`` output
+    rows per grid step.
+    """
+    n, h, wdt, cin = x.shape
+    th = tile_rows if 0 < tile_rows < ho else ho
+    tiles = -(-ho // th)
+    halo = tiles > 1
+    if not halo:
+        x_specs = [pl.BlockSpec((1, h, wdt, cin), lambda b, r, t: (b, 0, 0, 0))]
+        return x, x_specs, 1, th, False
+    row_in = stride * th  # input rows consumed per output-row tile
+    if row_in < kh:
+        raise ValueError(
+            f"tile_rows={th} too small: stride*tile_rows ({row_in}) must cover "
+            f"the {kh}-row tap window for the two-block halo scheme"
+        )
+    # tile r reads blocks r and r+1; the last tile (and its ragged output
+    # rows) must see zeros past the real image
+    need = (tiles + 1) * row_in
+    if need > h:
+        x = jnp.pad(x, ((0, 0), (0, need - h), (0, 0), (0, 0)))
+    x_specs = [
+        pl.BlockSpec((1, row_in, wdt, cin), lambda b, r, t: (b, r, 0, 0)),
+        pl.BlockSpec((1, row_in, wdt, cin), lambda b, r, t: (b, r + 1, 0, 0)),
+    ]
+    return x, x_specs, tiles, th, True
 
 
 @functools.partial(
-    jax.jit, static_argnames=("stride", "tau", "relu", "qout", "interpret")
+    jax.jit,
+    static_argnames=("stride", "tau", "relu", "qout", "tile_rows", "interpret"),
 )
 def conv2d_pallas(
     x: jax.Array,
@@ -92,12 +145,15 @@ def conv2d_pallas(
     tau: int = 128,
     relu: bool = False,
     qout: QFormat | None = None,
+    tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC VALID conv, any stride.  x: (N,H,W,Cin), w: (K,K,Cin,Cout).
 
     ``bias``: (Cout,) fused into the write-back; ``relu``/``qout``: fused
     nonlinearity and (fake-)quantization to a Q format, applied after bias.
+    ``tile_rows``: output rows per grid step (0 = whole image untiled); the
+    engine picks it so the working set fits VMEM (DESIGN.md §2).
     """
     n, h, wdt, cin = x.shape
     kh, kw, cin2, cout = w.shape
@@ -111,46 +167,45 @@ def conv2d_pallas(
     # (kh*kw*cin, cout) with rows ordered (tap-major, cin-minor) to match the
     # kernel's per-tap row slices.
     wmat = w.reshape(kh * kw * cin, coutp)
-    operands = [x, wmat]
-    in_specs = [
-        pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
-        pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
-    ]
+    x, x_specs, tiles, th, halo = _conv_grid(x, kh, stride, ho, tile_rows)
+    operands = [x] * (2 if halo else 1) + [wmat]
+    in_specs = x_specs + [pl.BlockSpec((kh * kw * cin, tau), lambda b, r, t: (0, t))]
     if bias is not None:
         operands.append(
             jnp.pad(bias.astype(jnp.float32), (0, coutp - cout)).reshape(1, coutp)
         )
-        in_specs.append(pl.BlockSpec((1, tau), lambda b, t: (0, t)))
+        in_specs.append(pl.BlockSpec((1, tau), lambda b, r, t: (0, t)))
 
     kernel = functools.partial(
-        _conv_kernel, kh=kh, kw=kw, ho=ho, wo=wo, stride=stride, relu=relu, qout=qout
+        _conv_kernel, kh=kh, kw=kw, th=th, wo=wo, stride=stride, relu=relu,
+        qout=qout, halo=halo, fused_bias=bias is not None,
     )
     out = pl.pallas_call(
         kernel,
-        grid=(n, coutp // tau),
+        grid=(n, tiles, coutp // tau),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, ho, wo, tau), lambda b, t: (b, 0, 0, t)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, coutp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((ho * wo, tau), jnp.float32)],
+        out_specs=pl.BlockSpec((1, th, wo, tau), lambda b, r, t: (b, r, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, tiles * th, wo, coutp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((th * wo, tau), jnp.float32)],
         interpret=interpret,
     )(*operands)
-    return out[..., :cout]
+    return out[:, :ho, :, :cout]
 
 
-def _conv_q16_kernel(*refs, kh, kw, ho, wo, stride, relu, frac_bits, raw_min, raw_max):
+def _conv_q16_kernel(
+    *refs, kh, kw, th, wo, stride, relu, frac_bits, raw_min, raw_max, halo, fused_bias
+):
     # Same dataflow as _conv_kernel, fixed point: int16 taps accumulated in
     # int32 (DESIGN.md §2), saturating round-shift write-back to Qm.n.
-    if len(refs) == 5:
-        x_ref, w_ref, b_ref, o_ref, acc_ref = refs
-    else:
-        x_ref, w_ref, o_ref, acc_ref = refs
-        b_ref = None
+    x1_ref, x2_ref, w_ref, b_ref, o_ref, acc_ref = _split_refs(refs, halo, fused_bias)
     acc_ref[...] = jnp.zeros_like(acc_ref)
-    cin = x_ref.shape[3]
-    img = x_ref[0]
+    cin = x1_ref.shape[3]
+    img = x1_ref[0]
+    if halo:
+        img = jnp.concatenate([img, x2_ref[0]], axis=0)
     for i in range(kh):
         for j in range(kw):
-            lhs = _tap_patch(img, i, j, ho, wo, stride).astype(jnp.int32)
+            lhs = _tap_patch(img, i, j, th, wo, stride).astype(jnp.int32)
             rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :].astype(jnp.int32)
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.int32)
     acc = acc_ref[...]
@@ -163,11 +218,12 @@ def _conv_q16_kernel(*refs, kh, kw, ho, wo, stride, relu, frac_bits, raw_min, ra
     rounding = jnp.int32(1 << (frac_bits - 1))
     shifted = (acc + rounding) >> frac_bits
     out = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
-    o_ref[...] = out.reshape(1, ho, wo, -1)
+    o_ref[...] = out.reshape(1, th, wo, -1)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("stride", "tau", "relu", "fmt", "interpret")
+    jax.jit,
+    static_argnames=("stride", "tau", "relu", "fmt", "tile_rows", "interpret"),
 )
 def conv2d_q16_pallas(
     xq: jax.Array,
@@ -178,9 +234,15 @@ def conv2d_q16_pallas(
     tau: int = 128,
     relu: bool = False,
     fmt: QFormat = Q2_14,
+    tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
-    """Fixed-point NHWC VALID conv, any stride.  All tensors int16 raw Qm.n."""
+    """Fixed-point NHWC VALID conv, any stride.  All tensors int16 raw Qm.n.
+
+    ``tile_rows`` spatially tiles the output rows exactly as in
+    :func:`conv2d_pallas`; zero-padded halo rows contribute zero products, so
+    tiled and untiled accumulations are bit-identical.
+    """
     assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
     n, h, wdt, cin = xq.shape
     kh, kw, cin2, cout = wq.shape
@@ -192,36 +254,36 @@ def conv2d_q16_pallas(
     if coutp != cout:
         wq = jnp.pad(wq, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
     wmat = wq.reshape(kh * kw * cin, coutp)
-    operands = [xq, wmat]
-    in_specs = [
-        pl.BlockSpec((1, h, wdt, cin), lambda b, t: (b, 0, 0, 0)),
-        pl.BlockSpec((kh * kw * cin, tau), lambda b, t: (0, t)),
-    ]
+    xq, x_specs, tiles, th, halo = _conv_grid(xq, kh, stride, ho, tile_rows)
+    operands = [xq] * (2 if halo else 1) + [wmat]
+    in_specs = x_specs + [pl.BlockSpec((kh * kw * cin, tau), lambda b, r, t: (0, t))]
     if bias is not None:
         operands.append(
             jnp.pad(bias.astype(jnp.int16), (0, coutp - cout)).reshape(1, coutp)
         )
-        in_specs.append(pl.BlockSpec((1, tau), lambda b, t: (0, t)))
+        in_specs.append(pl.BlockSpec((1, tau), lambda b, r, t: (0, t)))
 
     kernel = functools.partial(
         _conv_q16_kernel,
         kh=kh,
         kw=kw,
-        ho=ho,
+        th=th,
         wo=wo,
         stride=stride,
         relu=relu,
         frac_bits=fmt.frac_bits,
         raw_min=fmt.raw_min,
         raw_max=fmt.raw_max,
+        halo=halo,
+        fused_bias=bias is not None,
     )
     out = pl.pallas_call(
         kernel,
-        grid=(n, coutp // tau),
+        grid=(n, tiles, coutp // tau),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, ho, wo, tau), lambda b, t: (b, 0, 0, t)),
-        out_shape=jax.ShapeDtypeStruct((n, ho, wo, coutp), jnp.int16),
-        scratch_shapes=[pltpu.VMEM((ho * wo, tau), jnp.int32)],
+        out_specs=pl.BlockSpec((1, th, wo, tau), lambda b, r, t: (b, r, 0, t)),
+        out_shape=jax.ShapeDtypeStruct((n, tiles * th, wo, coutp), jnp.int16),
+        scratch_shapes=[pltpu.VMEM((th * wo, tau), jnp.int32)],
         interpret=interpret,
     )(*operands)
-    return out[..., :cout]
+    return out[:, :ho, :, :cout]

@@ -135,22 +135,26 @@ def conv2d(
     qout: QFormat | None = None,
     route: str = "direct",
     block: MatmulBlock | None = None,
+    tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC conv on the unified compute unit, float path.
 
     route == "direct": the direct Pallas conv kernel — taps unrolled over the
-    MXU, strided taps read strided slices of the resident image slab.
+    MXU, strided taps read strided slices of the resident image slab, and
+    ``tile_rows`` > 0 tiles the output rows with halo-aware input blocks so
+    oversized images stay on this route.
     route == "im2col": im2col + the Pallas matmul kernel — same unified-GEMM
-    semantics; used when the image slab exceeds the VMEM budget
-    (DESIGN.md §2).  Epilogue (bias/ReLU/quant) is fused on both routes.
+    semantics; used when no direct (τ, tile_rows) config fits the VMEM
+    budget (DESIGN.md §2).  Epilogue (bias/ReLU/quant) is fused on both
+    routes.
     """
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     if route == "direct":
         return conv2d_pallas(
             x, w, bias, stride=stride, tau=tau, relu=relu, qout=qout,
-            interpret=interpret,
+            tile_rows=tile_rows, interpret=interpret,
         )
     assert route == "im2col", route
     n = x.shape[0]
@@ -175,6 +179,7 @@ def conv2d_q16(
     fmt: QFormat = Q2_14,
     route: str = "direct",
     block: MatmulBlock | None = None,
+    tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC conv, fixed-point path.  All tensors int16 raw Qm.n."""
@@ -183,7 +188,7 @@ def conv2d_q16(
     if route == "direct":
         return conv2d_q16_pallas(
             xq, wq, bias, stride=stride, tau=tau, relu=relu, fmt=fmt,
-            interpret=interpret,
+            tile_rows=tile_rows, interpret=interpret,
         )
     assert route == "im2col", route
     n = xq.shape[0]

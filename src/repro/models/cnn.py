@@ -126,6 +126,29 @@ class NetworkPlan:
     convs: tuple  # ConvPlan per conv stage
     fcs: tuple  # GemmPlan per FC layer
 
+    def describe(self) -> list[str]:
+        """One line per layer: route, τ, spatial tiles, modeled VMEM.
+
+        The human-readable face of the plan — ``benchmarks/kernel_table.py``
+        prints it so route/tile regressions show up in benchmark diffs
+        between PRs.
+        """
+        lines = []
+        for i, cp in enumerate(self.convs):
+            tiling = (
+                f"tiles={cp.spatial_tiles}x{cp.tile_rows}rows"
+                if cp.spatial_tiles > 1
+                else "untiled"
+            )
+            lines.append(
+                f"conv{i}: route={cp.route} tau={cp.tau} {tiling} "
+                f"vmem={cp.vmem_bytes / 2**20:.1f}MiB gemm={cp.gemm}"
+            )
+        for i, gp in enumerate(self.fcs):
+            blk = (gp.block.bm, gp.block.bn, gp.block.bk) if gp.block else None
+            lines.append(f"fc{i}: m={gp.m} n={gp.n} k={gp.k} block={blk}")
+        return lines
+
 
 _NETWORK_PLANS: dict = {}
 register_plan_store(_NETWORK_PLANS)

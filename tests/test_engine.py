@@ -141,6 +141,57 @@ def test_plan_cache_memoizes_and_counts(monkeypatch):
     assert len(calls) == 2 and cache.misses == 2
 
 
+def test_plan_conv_direct_selection_is_plan_cached(monkeypatch):
+    """The (tau, tile_rows) conv DSE runs once per layer geometry."""
+    calls = []
+    real = dse.default_conv_tile_for
+
+    def counting(*a, **kw):
+        calls.append(a)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(dse, "default_conv_tile_for", counting)
+    cache = PlanCache()
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True), plan_cache=cache)
+    p1 = eng.plan_conv((1, 32, 32, 8), (3, 3, 8, 16))
+    p2 = eng.plan_conv((1, 32, 32, 8), (3, 3, 8, 16))
+    assert p1 == p2 and p1.route == "direct"
+    assert len(calls) == 1, "second plan_conv must not re-run the conv-tile DSE"
+    assert cache.hits == 1 and cache.misses == 1 and len(cache) == 1
+
+
+def test_plan_cache_lifecycle_counters_and_replan():
+    """reset_plan_caches() leaves counters consistent, and a re-planned
+    network produces identical NetworkPlan blocks (guards persisted-autotune)."""
+    reset_plan_caches()
+    tpl = default_template("pallas")
+    pc = tpl.engine.plan_cache
+    p1 = plan_cnn(tpl, LENET, (1, 32, 32, 1))
+    entries, misses = len(pc), pc.misses
+    assert entries > 0
+    assert misses == entries, "every cached entry costs exactly one DSE search"
+    assert pc.hits == 0, "LeNet has no repeated layer shapes"
+    # memoized NetworkPlan: no new searches, no new hits (plan table, not cache)
+    assert plan_cnn(tpl, LENET, (1, 32, 32, 1)) is p1
+    assert (pc.misses, pc.hits, len(pc)) == (misses, 0, entries)
+    reset_plan_caches()
+    assert len(pc) == 0 and pc.hits == 0 and pc.misses == 0
+    p2 = plan_cnn(tpl, LENET, (1, 32, 32, 1))
+    assert p2 is not p1, "reset must drop the NetworkPlan memo"
+    assert p2 == p1, "re-planning after reset must reproduce identical blocks"
+    assert pc.misses == misses and len(pc) == entries
+    reset_plan_caches()
+
+
+def test_register_plan_store_is_emptied_on_reset():
+    from repro.core.engine import register_plan_store
+
+    store = {("some", "plan", "key"): object()}
+    register_plan_store(store)
+    reset_plan_caches()
+    assert store == {}
+
+
 def test_template_matmul_single_dse_search(monkeypatch):
     reset_plan_caches()
     calls = _count_searches(monkeypatch)
