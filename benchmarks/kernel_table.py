@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dse import default_block_for
+from repro.core.engine import plan_cache_for
 from repro.core.tiling import TPU_V5E
 from repro.kernels import ops, ref
 
@@ -34,8 +34,9 @@ CASES = {
 def structural_rows() -> list[dict]:
     rows = []
     ridge = TPU_V5E.peak_bf16_flops / TPU_V5E.hbm_bw
+    registry = plan_cache_for(TPU_V5E)  # warm runs serve these from the store
     for label, (m, n, k) in CASES.items():
-        blk = default_block_for(m, n, k)
+        blk = registry.block_for(m, n, k)
         flops = 2.0 * m * n * k
         mxu_s = flops / (TPU_V5E.peak_bf16_flops * blk.mxu_efficiency())
         hbm_s = (m * k + k * n + m * n) * 2 / TPU_V5E.hbm_bw
@@ -161,6 +162,55 @@ def spatial_tiling_row() -> dict:
     }
 
 
+def plan_store_warm_start_row() -> dict:
+    """Cold-vs-warm plan time through a persisted store, as JSON.
+
+    Plans a fixed shape set into an *isolated* registry (so the benchmark
+    leaves the process-global registries untouched), saves it, loads it into
+    a fresh registry, and re-plans: the warm pass must perform zero DSE grid
+    searches and be faster than the cold pass by roughly the full search
+    cost.
+    """
+    import os
+    import tempfile
+
+    from repro.core.engine import Engine, PlanRegistry
+    from repro.core.template import TemplateConfig
+
+    gemms = [(256, 512, 256), (1024, 1024, 512), (4096, 1728, 5120)]
+    convs = [((1, 32, 32, 16), (3, 3, 16, 32)), ((1, 224, 224, 3), (11, 11, 3, 64))]
+
+    def plan_all(reg):
+        eng = Engine(TemplateConfig(backend="pallas", interpret=True), plan_cache=reg)
+        t0 = time.perf_counter()
+        for m, n, k in gemms:
+            eng.plan_gemm(m, n, k)
+        for x_shape, w_shape in convs:
+            eng.plan_conv(x_shape, w_shape, stride=1, padding=1)
+        return time.perf_counter() - t0
+
+    cold = PlanRegistry()
+    cold_s = plan_all(cold)
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        cold.save(path)
+        warm = PlanRegistry()
+        warm.load(path)
+        warm_s = plan_all(warm)
+    finally:
+        os.unlink(path)
+    return {
+        "bench": "plan_store_warm_start",
+        "entries": len(cold),
+        "cold_plan_s": round(cold_s, 4),
+        "warm_plan_s": round(warm_s, 4),
+        "speedup": round(cold_s / max(warm_s, 1e-9), 1),
+        "cold_misses": cold.misses,
+        "warm_misses": warm.misses,
+    }
+
+
 def main():
     print("== Kernel structural table (TPU v5e targets) ==")
     print(f"{'gemm':28s} {'block':>16s} {'vmem':>6s} {'mxu':>5s} "
@@ -180,6 +230,11 @@ def main():
     print(json.dumps(tiled))
     assert tiled["route"] == "direct" and tiled["spatial_tiles"] >= 2
     assert tiled["tiled_vs_im2col_max_err"] < 1e-4
+    print("\n== plan store cold vs warm (JSON, append-able trajectory) ==")
+    warm_row = plan_store_warm_start_row()
+    print(json.dumps(warm_row))
+    assert warm_row["warm_misses"] == 0, "warm registry must not re-search"
+    assert warm_row["cold_misses"] == warm_row["entries"]
     print("\n== VGG16 @ 512x512 network plan (route/tile regressions diff here) ==")
     from repro.core.template import default_template
     from repro.models.cnn import CNN_ZOO, plan_cnn

@@ -10,11 +10,23 @@
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 
 def main():
+    from repro.core.engine import (
+        plan_store_stats,
+        save_plan_store,
+        warm_start_plan_store,
+    )
+
+    store_path, n = warm_start_plan_store()
+    warm = n > 0
+    if warm:
+        print(f"[plan-store] warm-started {n} entries from {store_path}")
+
     failures = []
     for name in ("table1", "table2", "dse_sweep", "kernel_table"):
         print("\n" + "=" * 72)
@@ -24,7 +36,6 @@ def main():
         except Exception:
             traceback.print_exc()
             failures.append(name)
-    import os
 
     for label, d in (("baseline", "experiments/dryrun"),
                      ("optimized", "experiments/dryrun_opt")):
@@ -42,6 +53,25 @@ def main():
         except Exception:
             traceback.print_exc()
             failures.append(f"roofline_report:{label}")
+    st = plan_store_stats()
+    print(f"\n[plan-store] this run: {st['gemm_blocks']} GEMM blocks + "
+          f"{st['conv_tiles']} conv tiles in registry, "
+          f"{st['misses']} new DSE searches, {st['hits']} cache hits")
+    if os.environ.get("REPRO_PLAN_ASSERT_WARM") == "1":
+        # CI warm-start gate: a run against a populated store must not search.
+        # Checked *before* saving — persisting the newly searched entries on
+        # a failing gate would make a retry self-heal and mask the regression.
+        if not warm:
+            print("[plan-store] ASSERT_WARM set but no store was loaded")
+            sys.exit(1)
+        if st["misses"] > 0:
+            print(f"[plan-store] warm-start FAILED: {st['misses']} DSE searches "
+                  "ran against a populated store")
+            sys.exit(1)
+        print("[plan-store] warm-start OK: zero DSE searches")
+    if store_path:
+        save_plan_store(store_path)
+        print(f"[plan-store] saved to {store_path}")
     if failures:
         print(f"\nbenchmark FAILURES: {failures}")
         sys.exit(1)

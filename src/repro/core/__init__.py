@@ -10,7 +10,20 @@
 """
 from .quantization import Q2_14, QFormat, dequantize, fake_quant_fmt, qmatmul_real, qmatmul_ref, quantize
 from .template import Template, TemplateConfig, default_template
-from .engine import ConvPlan, Engine, GemmPlan, PlanCache, plan_cache_for, reset_plan_caches
+from .engine import (
+    ConvPlan,
+    Engine,
+    GemmPlan,
+    PlanCache,
+    PlanRegistry,
+    PlanStoreError,
+    load_plan_store,
+    plan_cache_for,
+    plan_store_stats,
+    reset_plan_caches,
+    save_plan_store,
+    warm_start_plan_store,
+)
 from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec
 from .roofline import RooflineReport, parse_collective_bytes, roofline_from_compiled
 
@@ -19,8 +32,14 @@ __all__ = [
     "Engine",
     "GemmPlan",
     "PlanCache",
+    "PlanRegistry",
+    "PlanStoreError",
+    "load_plan_store",
     "plan_cache_for",
+    "plan_store_stats",
     "reset_plan_caches",
+    "save_plan_store",
+    "warm_start_plan_store",
     "Q2_14",
     "QFormat",
     "quantize",

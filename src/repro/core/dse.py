@@ -33,6 +33,8 @@ from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec, ceil_di
 __all__ = [
     "DseResult",
     "ConvTileChoice",
+    "conv_choice_from_doc",
+    "conv_choice_to_doc",
     "explore_board",
     "explore_tpu_block",
     "explore_conv_spatial",
@@ -184,6 +186,22 @@ class ConvTileChoice:
     spatial_tiles: int  # ceil(ho / tile_rows)
     vmem_bytes: int
     score: float
+
+
+def conv_choice_to_doc(choice: ConvTileChoice) -> dict:
+    """JSON-serializable form of a ConvTileChoice (plan-store schema)."""
+    return dataclasses.asdict(choice)
+
+
+def conv_choice_from_doc(doc: dict) -> ConvTileChoice:
+    """Inverse of :func:`conv_choice_to_doc`; bit-identical round-trip."""
+    return ConvTileChoice(
+        tau=int(doc["tau"]),
+        tile_rows=int(doc["tile_rows"]),
+        spatial_tiles=int(doc["spatial_tiles"]),
+        vmem_bytes=int(doc["vmem_bytes"]),
+        score=float(doc["score"]),
+    )
 
 
 def _conv_tile_score(

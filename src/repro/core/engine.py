@@ -4,17 +4,27 @@ The paper chooses the compute-unit configuration *once* per network from the
 hardware specification, then runs every conv/FC layer through the resulting
 template.  This module is that split for the TPU plane:
 
-* :class:`PlanCache` — memoized DSE block selection.  ``default_block_for``
-  is an exhaustive grid search over (bm, bn, bk); the cache guarantees it
-  runs **once per GEMM shape per hardware spec**, with hit/miss counters so
-  tests (and ops dashboards) can assert no re-search happens on the hot path.
-  Caches are process-global per :class:`~repro.core.tiling.TpuSpec`, so every
-  Template/Engine instance targeting the same hardware shares one plan.
+* :class:`PlanRegistry` — the durable DSE artifact (DESIGN.md §6).
+  ``default_block_for`` is an exhaustive grid search over (bm, bn, bk); the
+  registry guarantees it runs **once per GEMM shape per hardware spec**, with
+  hit/miss counters so tests (and ops dashboards) can assert no re-search
+  happens on the hot path.  Beyond the in-process memo the registry
+  *persists*: ``save``/``load`` round-trip GEMM blocks and direct-conv
+  (τ, tile_rows) choices — including cached no-fit sentinels — as versioned
+  JSON keyed by (shape..., :class:`~repro.core.tiling.TpuSpec`), and
+  ``measure_and_pin`` overwrites the analytic choice with a measured-time
+  winner (per-entry ``source`` provenance: ``analytic`` vs ``measured``).
+  Registries are process-global per spec (:func:`plan_cache_for`);
+  :func:`save_plan_store`/:func:`load_plan_store` serialize them all to the
+  ``REPRO_PLAN_STORE`` path so serving restarts and CI benchmark runs
+  warm-start with zero grid searches.
 
 * :class:`ConvPlan` / :class:`GemmPlan` — per-layer execution plans: which
   kernel route a conv takes (direct Pallas conv vs im2col GEMM), the
   output-channel tile τ and spatial row tile of the direct route, and the
-  pre-resolved Pallas block for GEMM routes.
+  pre-resolved Pallas block for GEMM routes.  Planning is sharding-aware:
+  ``Engine.plan_gemm``/``plan_conv`` accept an optional mesh + PartitionSpec
+  and plan the *local per-shard* shapes (M over data axes, N over model).
 
 * :class:`Engine` — executes plans.  It owns backend dispatch (xla / pallas
   float / q16 fixed point), the conv routing decision (DESIGN.md §2), and
@@ -28,8 +38,12 @@ template.  This module is that split for the TPU plane:
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
-from typing import Optional
+import json
+import os
+import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,36 +53,76 @@ from .quantization import QFormat, dequantize, fake_quant_fmt, quantize
 from .tiling import MatmulBlock, TPU_V5E, TpuSpec, clamp_block
 
 __all__ = [
+    "PLAN_STORE_ENV",
+    "PLAN_STORE_FORMAT",
+    "PLAN_STORE_VERSION",
     "PlanCache",
+    "PlanRegistry",
+    "PlanStoreError",
     "ConvPlan",
     "GemmPlan",
     "Engine",
+    "default_plan_store_path",
+    "load_plan_store",
     "plan_cache_for",
+    "plan_store_stats",
     "register_plan_store",
     "reset_plan_caches",
+    "save_plan_store",
+    "warm_start_plan_store",
 ]
 
 
 # ---------------------------------------------------------------------------
-# plan cache (memoized DSE)
+# plan registry (memoized DSE, persistent + measured-time overwrite)
 # ---------------------------------------------------------------------------
 
+PLAN_STORE_FORMAT = "repro-plan-store"
+PLAN_STORE_VERSION = 1
+#: Env var naming the default persisted plan-store path.  When set, the
+#: launch drivers (serve/train) and the benchmark harness warm-start from it
+#: and write newly planned shapes back on exit.
+PLAN_STORE_ENV = "REPRO_PLAN_STORE"
 
-class PlanCache:
+
+class PlanStoreError(ValueError):
+    """A plan store file is unreadable, corrupted, or version-mismatched."""
+
+
+def _spec_to_doc(spec: TpuSpec) -> dict:
+    return dataclasses.asdict(spec)
+
+
+def _spec_from_doc(doc: dict) -> TpuSpec:
+    try:
+        return TpuSpec(**doc)
+    except TypeError as err:
+        raise PlanStoreError(f"unrecognized TpuSpec fields in plan store: {err}") from err
+
+
+class PlanRegistry:
     """Memoized DSE selection: GEMM blocks and direct-conv tile configs.
 
     GEMM blocks are keyed by (m, n, k, hardware spec); direct-conv
     (τ, tile_rows) choices by the layer geometry + spec.  ``misses`` counts
     actual grid searches performed (either kind); ``hits`` counts lookups
-    served from the cache.  A repeated shape must cost exactly one search
-    for the lifetime of the cache.
+    served from the registry.  A repeated shape must cost exactly one search
+    for the lifetime of the registry — or *zero* when the entry was
+    pre-loaded from a persisted store (:meth:`load`) or pinned by the
+    measured-time autotuner (:meth:`measure_and_pin`).  Every entry carries
+    ``source`` provenance: ``"analytic"`` (grid-search score) or
+    ``"measured"`` (timed kernel launches).
     """
 
     def __init__(self) -> None:
         self._blocks: dict = {}
         self._conv_tiles: dict = {}
+        self._block_src: dict = {}
+        self._conv_src: dict = {}
         self.hits = 0
         self.misses = 0
+
+    # -- lookups (memoized searches) ----------------------------------------
 
     def block_for(self, m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> MatmulBlock:
         key = (m, n, k, spec)
@@ -77,6 +131,7 @@ class PlanCache:
             self.misses += 1
             blk = dse.default_block_for(m, n, k, spec)
             self._blocks[key] = blk
+            self._block_src[key] = "analytic"
         else:
             self.hits += 1
         return blk
@@ -96,7 +151,74 @@ class PlanCache:
             hp, wp, cin, kh, kw, ho, wo, cout, stride, spec, in_bytes
         )
         self._conv_tiles[key] = choice
+        self._conv_src[key] = "analytic"
         return choice
+
+    # -- measured-time autotune ---------------------------------------------
+
+    def measure_and_pin(
+        self,
+        m: int,
+        n: int,
+        k: int,
+        spec: TpuSpec = TPU_V5E,
+        *,
+        candidates: Optional[Sequence[MatmulBlock]] = None,
+        top_k: int = 3,
+        reps: int = 2,
+        interpret: bool = True,
+        dtype=jnp.float32,
+    ) -> MatmulBlock:
+        """Time the top-K analytic candidates with real kernel launches and
+        overwrite the registry entry with the fastest (``source: measured``).
+
+        On this CPU container ``interpret=True`` times the Pallas interpreter
+        rather than the MXU — the *mechanism* (measure, pick, pin, persist)
+        is what ships; on real hardware the same call times compiled kernels.
+        """
+        from repro.kernels import ops as kops
+
+        if candidates is None:
+            ranked = dse.explore_tpu_block(m, n, k, spec, top=top_k)
+            candidates = [blk for blk, _ in ranked]
+        if not candidates:
+            candidates = [clamp_block(m, n, k, MatmulBlock(128, 128, 128), spec)]
+        key0 = jax.random.PRNGKey(0)
+        x = jax.random.normal(key0, (m, k), dtype) * 0.3
+        w = jax.random.normal(jax.random.fold_in(key0, 1), (k, n), dtype) * 0.3
+        best, best_t = None, float("inf")
+        for blk in candidates:
+            run = lambda: jax.block_until_ready(
+                kops.matmul_fp(x, w, block=blk, interpret=interpret)
+            )
+            run()  # compile / first-touch outside the timed region
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                run()
+            t = (time.perf_counter() - t0) / reps
+            if t < best_t:
+                best, best_t = blk, t
+        key = (m, n, k, spec)
+        self._blocks[key] = best
+        self._block_src[key] = "measured"
+        return best
+
+    # -- provenance / stats --------------------------------------------------
+
+    def source_for(self, m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> Optional[str]:
+        return self._block_src.get((m, n, k, spec))
+
+    def stats(self) -> dict:
+        """Separate GEMM-block and conv-tile counts (+ counters, provenance)."""
+        measured = sum(1 for s in self._block_src.values() if s == "measured")
+        measured += sum(1 for s in self._conv_src.values() if s == "measured")
+        return {
+            "gemm_blocks": len(self._blocks),
+            "conv_tiles": len(self._conv_tiles),
+            "hits": self.hits,
+            "misses": self.misses,
+            "measured": measured,
+        }
 
     def __len__(self) -> int:
         return len(self._blocks) + len(self._conv_tiles)
@@ -104,8 +226,168 @@ class PlanCache:
     def clear(self) -> None:
         self._blocks.clear()
         self._conv_tiles.clear()
+        self._block_src.clear()
+        self._conv_src.clear()
         self.hits = 0
         self.misses = 0
+
+    # -- serialization (DESIGN.md §6 schema) ---------------------------------
+
+    def to_doc(self) -> dict:
+        """The registry as a versioned, JSON-serializable document."""
+        specs: list = []
+        spec_ix: dict = {}
+
+        def six(spec: TpuSpec) -> int:
+            if spec not in spec_ix:
+                spec_ix[spec] = len(specs)
+                specs.append(_spec_to_doc(spec))
+            return spec_ix[spec]
+
+        def order(key):  # deterministic artifact: sort by spec then shape
+            return (repr(key[-1]), key[:-1])
+
+        gemm = [
+            {
+                "spec": six(key[3]),
+                "key": list(key[:3]),
+                "block": [blk.bm, blk.bn, blk.bk],
+                "source": self._block_src.get(key, "analytic"),
+            }
+            for key, blk in sorted(self._blocks.items(), key=lambda kv: order(kv[0]))
+        ]
+        conv = [
+            {
+                "spec": six(key[-1]),
+                "key": list(key[:-1]),
+                "choice": None if choice is None else dse.conv_choice_to_doc(choice),
+                "source": self._conv_src.get(key, "analytic"),
+            }
+            for key, choice in sorted(self._conv_tiles.items(), key=lambda kv: order(kv[0]))
+        ]
+        return {
+            "format": PLAN_STORE_FORMAT,
+            "version": PLAN_STORE_VERSION,
+            "specs": specs,
+            "gemm": gemm,
+            "conv": conv,
+        }
+
+    def merge_doc(self, doc: dict) -> int:
+        """Merge a :meth:`to_doc` document into this registry.
+
+        Loaded entries overwrite existing ones and count as neither hits nor
+        misses (a later lookup of a loaded entry is a hit).  Returns the
+        number of entries merged; raises :class:`PlanStoreError` on any
+        format/version/structure mismatch.
+        """
+        blocks: dict = {}
+        block_src: dict = {}
+        conv_tiles: dict = {}
+        conv_src: dict = {}
+        try:
+            if doc.get("format") != PLAN_STORE_FORMAT:
+                raise PlanStoreError(
+                    f"not a plan store (format={doc.get('format')!r}, "
+                    f"want {PLAN_STORE_FORMAT!r})"
+                )
+            if doc.get("version") != PLAN_STORE_VERSION:
+                raise PlanStoreError(
+                    f"plan store version {doc.get('version')!r} does not match "
+                    f"this build's version {PLAN_STORE_VERSION}"
+                )
+            specs = [_spec_from_doc(d) for d in doc["specs"]]
+
+            def spec_at(ix) -> TpuSpec:
+                if not isinstance(ix, int) or not 0 <= ix < len(specs):
+                    raise PlanStoreError(f"bad spec index {ix!r}")
+                return specs[ix]
+
+            for e in doc["gemm"]:
+                if len(e["key"]) != 3 or len(e["block"]) != 3:
+                    raise PlanStoreError(
+                        f"bad gemm entry: key={e['key']!r} block={e['block']!r}"
+                    )
+                m, nn, k = (int(v) for v in e["key"])
+                key = (m, nn, k, spec_at(e["spec"]))
+                blocks[key] = MatmulBlock(*(int(v) for v in e["block"]))
+                block_src[key] = str(e.get("source", "analytic"))
+            for e in doc["conv"]:
+                key = tuple(int(v) for v in e["key"]) + (spec_at(e["spec"]),)
+                if len(key) != 11:
+                    raise PlanStoreError(f"bad conv key of length {len(key)}")
+                choice = e["choice"]
+                conv_tiles[key] = (
+                    None if choice is None else dse.conv_choice_from_doc(choice)
+                )
+                conv_src[key] = str(e.get("source", "analytic"))
+        except PlanStoreError:
+            raise
+        except (KeyError, IndexError, TypeError, ValueError) as err:
+            raise PlanStoreError(f"corrupted plan store: {err!r}") from err
+        # commit only after the whole document validated — a rejected store
+        # must never leave a half-merged registry behind
+        self._merge_entries(self._blocks, self._block_src, blocks, block_src)
+        self._merge_entries(self._conv_tiles, self._conv_src, conv_tiles, conv_src)
+        return len(blocks) + len(conv_tiles)
+
+    @staticmethod
+    def _merge_entries(dst_vals: dict, dst_src: dict, vals: dict, srcs: dict) -> None:
+        """Merge entry maps; an existing *measured* pin outranks an incoming
+        analytic choice (measured-time autotune results are expensive and
+        must never be silently downgraded by a concurrent analytic writer)."""
+        for key, val in vals.items():
+            src = srcs.get(key, "analytic")
+            if dst_src.get(key) == "measured" and src != "measured":
+                continue
+            dst_vals[key] = val
+            dst_src[key] = src
+
+    def merge_from(self, other: "PlanRegistry", spec: Optional[TpuSpec] = None) -> None:
+        """Copy ``other``'s entries into this registry (incoming wins on
+        conflict, except that measured pins outrank analytic choices);
+        ``spec`` restricts the copy to entries keyed by one hardware spec.
+        Counters are untouched — merges are not lookups."""
+        blocks = {
+            k: v for k, v in other._blocks.items() if spec is None or k[3] == spec
+        }
+        tiles = {
+            k: v for k, v in other._conv_tiles.items() if spec is None or k[-1] == spec
+        }
+        self._merge_entries(self._blocks, self._block_src, blocks, other._block_src)
+        self._merge_entries(self._conv_tiles, self._conv_src, tiles, other._conv_src)
+
+    def specs(self) -> set:
+        """The distinct hardware specs this registry holds entries for."""
+        return {key[3] for key in self._blocks} | {key[-1] for key in self._conv_tiles}
+
+    def save(self, path: str) -> str:
+        """Write the registry as versioned JSON (atomic replace)."""
+        doc = self.to_doc()
+        tmp = f"{path}.tmp.{os.getpid()}"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        os.replace(tmp, path)
+        return path
+
+    def load(self, path: str) -> int:
+        """Merge a persisted store into this registry; returns entries loaded."""
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except OSError as err:
+            raise PlanStoreError(f"cannot read plan store {path!r}: {err}") from err
+        except json.JSONDecodeError as err:
+            raise PlanStoreError(f"corrupted plan store {path!r}: {err}") from err
+        if not isinstance(doc, dict):
+            raise PlanStoreError(f"corrupted plan store {path!r}: not a JSON object")
+        return self.merge_doc(doc)
+
+
+#: Back-compat alias — PR 1/2 code and tests constructed PlanCache directly.
+PlanCache = PlanRegistry
 
 
 _PLAN_CACHES: dict = {}
@@ -114,16 +396,22 @@ _PLAN_CACHES: dict = {}
 _EXTRA_PLAN_STORES: list = []
 
 
-def plan_cache_for(spec: TpuSpec = TPU_V5E) -> PlanCache:
-    """The process-global plan cache for a hardware spec."""
+def plan_cache_for(spec: TpuSpec = TPU_V5E) -> PlanRegistry:
+    """The process-global plan registry for a hardware spec."""
     cache = _PLAN_CACHES.get(spec)
     if cache is None:
-        cache = _PLAN_CACHES[spec] = PlanCache()
+        cache = _PLAN_CACHES[spec] = PlanRegistry()
     return cache
 
 
 def register_plan_store(store: dict) -> None:
-    """Register a derived plan memo to be emptied by :func:`reset_plan_caches`."""
+    """Register a derived plan memo to be emptied by :func:`reset_plan_caches`.
+
+    Registrations are deduplicated by identity: a module re-registering its
+    (module-level) memo — e.g. via importlib.reload — must not grow the list.
+    """
+    if any(s is store for s in _EXTRA_PLAN_STORES):
+        return
     _EXTRA_PLAN_STORES.append(store)
 
 
@@ -131,12 +419,117 @@ def reset_plan_caches() -> None:
     """Drop all cached plans (tests / reconfiguration).
 
     Caches are cleared in place — live Engines keep their (now empty)
-    PlanCache object, so their stats stay consistent with the global one.
+    PlanRegistry object, so their stats stay consistent with the global one.
     """
     for cache in _PLAN_CACHES.values():
         cache.clear()
     for store in _EXTRA_PLAN_STORES:
         store.clear()
+
+
+# ---------------------------------------------------------------------------
+# persisted plan store (all per-spec registries <-> one JSON file)
+# ---------------------------------------------------------------------------
+
+
+def default_plan_store_path() -> Optional[str]:
+    """The ``REPRO_PLAN_STORE`` path, or None when unset/empty."""
+    return os.environ.get(PLAN_STORE_ENV) or None
+
+
+@contextlib.contextmanager
+def _store_write_lock(path: str):
+    """Serialize the read-merge-write save cycle across processes sharing one
+    store (serve + train, parallel CI shards) via an advisory flock on a
+    sidecar file.  Best-effort: on platforms without fcntl the save falls
+    back to the unserialized (atomic-replace) write."""
+    try:
+        import fcntl
+    except ImportError:  # pragma: no cover - non-POSIX platforms
+        yield
+        return
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(f"{path}.lock", "w") as lockf:
+        fcntl.flock(lockf, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(lockf, fcntl.LOCK_UN)
+
+
+def save_plan_store(path: Optional[str] = None) -> str:
+    """Serialize every process-global registry into one versioned JSON file.
+
+    Entries already on disk are merged in first (this process's plans win on
+    conflict), so concurrent writers sharing one store — e.g. serve + train,
+    or two CI shards — append to rather than overwrite each other's work.
+    An unusable on-disk store is simply replaced.
+    """
+    path = path or default_plan_store_path()
+    if path is None:
+        raise ValueError(
+            f"no plan-store path given and {PLAN_STORE_ENV} is unset"
+        )
+    with _store_write_lock(path):
+        merged = PlanRegistry()
+        if os.path.exists(path):
+            try:
+                merged.load(path)
+            except PlanStoreError:
+                pass
+        for reg in _PLAN_CACHES.values():
+            merged.merge_from(reg)
+        return merged.save(path)
+
+
+def load_plan_store(path: Optional[str] = None, *, missing_ok: bool = False) -> int:
+    """Load a persisted store and distribute entries to the per-spec global
+    registries.  Returns the number of entries loaded (0 when ``missing_ok``
+    and the file does not exist)."""
+    path = path or default_plan_store_path()
+    if path is None:
+        raise ValueError(
+            f"no plan-store path given and {PLAN_STORE_ENV} is unset"
+        )
+    if missing_ok and not os.path.exists(path):
+        return 0
+    stage = PlanRegistry()
+    n = stage.load(path)
+    for spec in stage.specs():
+        plan_cache_for(spec).merge_from(stage, spec)
+    return n
+
+
+def warm_start_plan_store(path: Optional[str] = None) -> tuple[Optional[str], int]:
+    """Warm start from ``path`` (default: ``REPRO_PLAN_STORE``) if it exists.
+
+    The one warm-start entry point the launch drivers and the benchmark
+    harness share.  Returns (path, entries_loaded); (None, 0) when neither a
+    path nor the env var names a store.  A corrupted or version-mismatched
+    store is *not* fatal here — a warm-start cache must never be a startup
+    single point of failure, so the error is reported and the process cold
+    starts (strict loading stays available via :func:`load_plan_store`; the
+    CI warm gate still fails because zero entries load).
+    """
+    path = path or default_plan_store_path()
+    if path is None:
+        return None, 0
+    try:
+        return path, load_plan_store(path, missing_ok=True)
+    except PlanStoreError as err:
+        import warnings
+
+        warnings.warn(f"ignoring unusable plan store {path!r}: {err}")
+        return path, 0
+
+
+def plan_store_stats() -> dict:
+    """Aggregate :meth:`PlanRegistry.stats` across all per-spec registries."""
+    total = {"gemm_blocks": 0, "conv_tiles": 0, "hits": 0, "misses": 0, "measured": 0}
+    for reg in _PLAN_CACHES.values():
+        for k, v in reg.stats().items():
+            total[k] += v
+    return total
 
 
 # ---------------------------------------------------------------------------
@@ -146,12 +539,18 @@ def reset_plan_caches() -> None:
 
 @dataclasses.dataclass(frozen=True)
 class GemmPlan:
-    """Pre-resolved plan for one GEMM shape."""
+    """Pre-resolved plan for one GEMM shape.
+
+    (m, n, k) is the shape the kernel *executes* — under a mesh that is the
+    local per-shard shape, and ``logical`` records the global shape it was
+    derived from (empty when planned unsharded or the mesh splits nothing).
+    """
 
     m: int
     n: int
     k: int
     block: Optional[MatmulBlock]  # None for the xla backend
+    logical: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -222,12 +621,33 @@ class Engine:
             return clamp_block(m, n, k, self.config.block, self.config.hw)
         return self.plan_cache.block_for(m, n, k, self.config.hw)
 
-    def plan_gemm(self, m: int, n: int, k: int) -> GemmPlan:
+    def measure_and_pin(self, m: int, n: int, k: int, **kw) -> MatmulBlock:
+        """Measured-time autotune for this engine's hardware spec — times the
+        top-K analytic candidates and pins the winner in the registry."""
+        kw.setdefault("interpret", self.config.interpret)
+        return self.plan_cache.measure_and_pin(m, n, k, self.config.hw, **kw)
+
+    def plan_gemm(
+        self, m: int, n: int, k: int, *, mesh=None, partition=None
+    ) -> GemmPlan:
+        """Plan one GEMM; with ``mesh`` (+ optional PartitionSpec over
+        (M, N[, K])) the *local per-shard* shape is planned instead of the
+        logical one — a (16,16) mesh and a single chip produce different,
+        each-correct, plans from the same registry (DESIGN.md §6)."""
+        logical = ()
+        if mesh is not None:
+            from repro.parallel.sharding import local_gemm_shape
+
+            lm, ln, lk = local_gemm_shape(m, n, k, mesh=mesh, partition=partition)
+            if (lm, ln, lk) != (m, n, k):
+                logical = (m, n, k)
+            m, n, k = lm, ln, lk
         block = None if self.config.backend == "xla" else self.block_for(m, n, k)
-        return GemmPlan(m=m, n=n, k=k, block=block)
+        return GemmPlan(m=m, n=n, k=k, block=block, logical=logical)
 
     def plan_conv(
-        self, x_shape, w_shape, *, stride: int = 1, padding=0, route: Optional[str] = None
+        self, x_shape, w_shape, *, stride: int = 1, padding=0,
+        route: Optional[str] = None, mesh=None, partition=None,
     ) -> ConvPlan:
         """Pick the kernel route for one conv layer (DESIGN.md §2).
 
@@ -237,8 +657,15 @@ class Engine:
         tiling with two-block halo reads when it doesn't.  Only when *no*
         (τ, tile_rows) fits does the layer fall back to the im2col GEMM with
         a plan-cached DSE block.  ``route`` forces a route (tests /
-        benchmarks).
+        benchmarks).  With ``mesh`` the *local* shard of the layer is planned:
+        batch over the partition's M axes, output channels over its N axes.
         """
+        if mesh is not None:
+            from repro.parallel.sharding import local_conv_shapes
+
+            x_shape, w_shape = local_conv_shapes(
+                x_shape, w_shape, mesh=mesh, partition=partition
+            )
         n, h, wd, cin = x_shape
         kh, kw, _, cout = w_shape
         pad = _resolve_pad(padding, kh)

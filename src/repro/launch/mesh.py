@@ -17,7 +17,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh", "mesh_name", "mesh_chips"]
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "mesh_name",
+    "mesh_chips",
+    "gemm_partition",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -42,3 +48,20 @@ def mesh_chips(mesh) -> int:
     for a in mesh.axis_names:
         n *= mesh.shape[a]
     return n
+
+
+def gemm_partition(mesh):
+    """The canonical GEMM sharding on this mesh: M over the data-ish axes
+    ("pod", "data"), N over "model", K unsharded.
+
+    This is the default partition ``Engine.plan_gemm``/``plan_conv`` use to
+    derive local per-shard shapes when given a mesh without an explicit
+    PartitionSpec (DESIGN.md §6).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    data = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    if len(data) == 1:
+        data = data[0]
+    return P(data or None, model)

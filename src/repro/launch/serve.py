@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
+from repro.core.engine import PLAN_STORE_ENV, save_plan_store, warm_start_plan_store
 from repro.core.template import default_template
 from repro.data.pipeline import synthetic_batch
 from repro.models import transformer as T
@@ -51,7 +52,15 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-store", default=None,
+                    help=f"persisted plan-store path (default: ${PLAN_STORE_ENV})")
     args = ap.parse_args(argv)
+
+    # Warm-start the plan registry from the persisted store (if any): a
+    # restart with a populated store performs zero DSE grid searches.
+    store_path, n = warm_start_plan_store(args.plan_store)
+    if n:
+        print(f"[serve] plan store: warm-started {n} entries from {store_path}")
 
     cfg = reduced(get_config(args.arch))
     params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
@@ -74,11 +83,17 @@ def main(argv=None):
     gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl)
     dt = time.time() - t0
     pc = tpl.engine.plan_cache
+    st = pc.stats()
     print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
           f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
           f"in {dt:.2f}s ({args.prompts * args.gen / dt:.1f} tok/s)")
-    print(f"[serve] plan cache: {len(pc)} GEMM shapes planned, "
-          f"{pc.misses} DSE searches, {pc.hits} cache hits")
+    print(f"[serve] plan registry: {st['gemm_blocks']} GEMM blocks + "
+          f"{st['conv_tiles']} conv tiles planned "
+          f"({st['measured']} measured), {st['misses']} DSE searches, "
+          f"{st['hits']} cache hits")
+    if store_path:
+        save_plan_store(store_path)
+        print(f"[serve] plan store: saved to {store_path}")
     print("[serve] sample generations:")
     for row in gen[: min(2, args.prompts)]:
         print("   ", row.tolist())

@@ -36,6 +36,7 @@ __all__ = [
     "state_shardings",
     "batch_shardings",
     "cache_shardings",
+    "cell_gemm_plans",
     "step_and_specs",
 ]
 
@@ -194,6 +195,46 @@ def make_decode_step(cfg: ArchConfig, tpl: Optional[Template] = None):
 
 
 # ---------------------------------------------------------------------------
+# sharding-aware GEMM planning for a cell
+# ---------------------------------------------------------------------------
+
+
+def cell_gemm_plans(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                    rules: ShardingRules, tpl: Optional[Template] = None) -> dict:
+    """Plan the cell's dominant GEMMs at their *local* per-shard shapes.
+
+    Threads the mesh + the cell's logical-axis rule table into
+    ``Engine.plan_gemm``: M is the token dim sharded by the "batch" rule, N
+    by each projection's own logical axis ("qkv"/"mlp"/"vocab"), and the MLP
+    down-projection contracts over the model-sharded ff dim.  On a Pallas/q16
+    template this warms the plan registry with exactly the shapes each shard
+    executes; on the xla backend it still records the local geometry (blocks
+    are XLA's own there).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    tpl = tpl or default_template()
+    eng = tpl.engine
+    m = shape.tokens
+    d = cfg.d_model
+    batch_axes = rules.get("batch")
+
+    def plan(n, k, n_axis=None, k_axis=None):
+        part = P(batch_axes, rules.get(n_axis) if n_axis else None,
+                 rules.get(k_axis) if k_axis else None)
+        return eng.plan_gemm(m, n, k, mesh=mesh, partition=part)
+
+    return {
+        "qkv": plan((cfg.eff_heads + 2 * cfg.n_kv_heads) * cfg.head_dim, d,
+                    n_axis="qkv"),
+        "attn_out": plan(d, cfg.eff_heads * cfg.head_dim, k_axis="qkv"),
+        "mlp_up": plan(cfg.d_ff, d, n_axis="mlp"),
+        "mlp_down": plan(d, cfg.d_ff, k_axis="mlp"),
+        "lm_head": plan(cfg.vocab, d, n_axis="vocab"),
+    }
+
+
+# ---------------------------------------------------------------------------
 # one-call assembly for a dry-run cell
 # ---------------------------------------------------------------------------
 
@@ -208,11 +249,21 @@ class CellSpec:
     out_shardings: object
     donate_argnums: tuple
     kind: str
+    #: local per-shard GemmPlans of the cell's dominant projections
+    #: (qkv / attn_out / mlp_up / mlp_down / lm_head), from cell_gemm_plans
+    gemm_plans: dict = dataclasses.field(default_factory=dict)
 
 
 def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
-                   rules: ShardingRules, accum: int = 1) -> CellSpec:
-    """Build the jit-ready (fn, abstract args, shardings) for one cell."""
+                   rules: ShardingRules, accum: int = 1,
+                   tpl: Optional[Template] = None) -> CellSpec:
+    """Build the jit-ready (fn, abstract args, shardings) for one cell.
+
+    ``tpl`` is forwarded to both the step functions and the cell's GEMM
+    planning — pass a Pallas/q16 template to warm the plan registry with the
+    cell's local per-shard shapes (the default xla template records the
+    local geometry but leaves block selection to XLA).
+    """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     repl = NamedSharding(mesh, P())
@@ -220,9 +271,10 @@ def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
     b_sh = batch_shardings(cfg, shape, mesh, rules)
     p_shapes = abstract_params(cfg)
     p_sh, o_sh = state_shardings(cfg, mesh, rules)
+    plans = cell_gemm_plans(cfg, shape, mesh, rules, tpl)
 
     if shape.kind == "train":
-        fn = make_train_step(cfg, accum=accum)
+        fn = make_train_step(cfg, tpl=tpl, accum=accum)
         o_shapes = abstract_opt_state(cfg)
         metrics_sh = None  # replicated outputs
         return CellSpec(
@@ -233,9 +285,10 @@ def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
                 "ce": 0, "aux": 0, "grad_norm": 0, "lr": 0, "loss": 0})),
             donate_argnums=(0, 1),
             kind="train",
+            gemm_plans=plans,
         )
     if shape.kind == "prefill":
-        fn = make_prefill_step(cfg, cache_len=shape.seq_len)
+        fn = make_prefill_step(cfg, tpl=tpl, cache_len=shape.seq_len)
         c_shapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
         c_sh = cache_shardings(cfg, c_shapes, mesh, rules)
         logits_sh = None
@@ -246,9 +299,10 @@ def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
             out_shardings=(None, c_sh),
             donate_argnums=(),
             kind="prefill",
+            gemm_plans=plans,
         )
     # decode
-    fn = make_decode_step(cfg)
+    fn = make_decode_step(cfg, tpl=tpl)
     c_shapes = abstract_cache(cfg, shape.global_batch, shape.seq_len)
     c_sh = cache_shardings(cfg, c_shapes, mesh, rules)
     return CellSpec(
@@ -258,4 +312,5 @@ def step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh,
         out_shardings=(None, c_sh),
         donate_argnums=(1,),
         kind="decode",
+        gemm_plans=plans,
     )

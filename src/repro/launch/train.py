@@ -23,6 +23,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import SHAPES, get_config, reduced
+from repro.core.engine import (
+    PLAN_STORE_ENV,
+    plan_store_stats,
+    save_plan_store,
+    warm_start_plan_store,
+)
 from repro.data import make_pipeline
 from repro.launch.steps import (
     default_optimizer,
@@ -52,7 +58,13 @@ def main(argv=None):
                     help="inject a failure at this step (repeatable)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--plan-store", default=None,
+                    help=f"persisted plan-store path (default: ${PLAN_STORE_ENV})")
     args = ap.parse_args(argv)
+
+    store_path, n = warm_start_plan_store(args.plan_store)
+    if n:
+        print(f"[train] plan store: warm-started {n} entries from {store_path}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -145,6 +157,12 @@ def main(argv=None):
         f"[train] done: {stats['steps']} steps, {stats['failures']} failures, "
         f"restarts at {stats['restarts']}, loss {first:.4f} -> {last:.4f}"
     )
+    pst = plan_store_stats()
+    print(f"[train] plan registry: {pst['gemm_blocks']} GEMM blocks + "
+          f"{pst['conv_tiles']} conv tiles, {pst['misses']} DSE searches")
+    if store_path:
+        save_plan_store(store_path)
+        print(f"[train] plan store: saved to {store_path}")
     return stats, history
 
 

@@ -160,15 +160,27 @@ def plan_cnn(
     input_shape: Sequence[int],
     *,
     force_route: Optional[str] = None,
+    mesh=None,
+    partition=None,
 ) -> NetworkPlan:
     """Compile the network's kernel routes and Pallas blocks once.
 
-    Memoized per (template config, spec, input shape): repeated calls — and
-    every training/serving step — reuse the same plan object, so the DSE
-    grid search runs at most once per distinct GEMM shape in the network.
-    ``force_route`` overrides conv routing (e.g. "im2col" for A/B tests).
+    Memoized per (template config, spec, input shape, mesh topology):
+    repeated calls — and every training/serving step — reuse the same plan
+    object, so the DSE grid search runs at most once per distinct GEMM shape
+    in the network.  ``force_route`` overrides conv routing (e.g. "im2col"
+    for A/B tests).  With ``mesh`` every layer is planned at its *local*
+    per-shard shape (batch over the partition's M axes, output channels /
+    FC widths over its N axes); the inter-layer geometry stays logical since
+    activations are gathered between layers.
     """
-    key = (tpl.config, spec, tuple(input_shape), force_route)
+    mesh_key = None
+    if mesh is not None:
+        mesh_key = (
+            tuple((a, mesh.shape[a]) for a in mesh.axis_names),
+            partition,
+        )
+    key = (tpl.config, spec, tuple(input_shape), force_route, mesh_key)
     plan = _NETWORK_PLANS.get(key)
     if plan is not None:
         return plan
@@ -178,7 +190,7 @@ def plan_cnn(
     for cout, k, stride, pad, pool in spec.convs:
         cp = eng.plan_conv(
             (n, hh, ww, ch), (k, k, ch, cout), stride=stride, padding=pad,
-            route=force_route,
+            route=force_route, mesh=mesh, partition=partition,
         )
         convs.append(cp)
         hh = (hh + 2 * cp.pad - k) // stride + 1
@@ -190,7 +202,7 @@ def plan_cnn(
     fan = hh * ww * ch
     fcs = []
     for wd in (*spec.fcs, spec.n_classes):
-        fcs.append(eng.plan_gemm(n, wd, fan))
+        fcs.append(eng.plan_gemm(n, wd, fan, mesh=mesh, partition=partition))
         fan = wd
     plan = NetworkPlan(convs=tuple(convs), fcs=tuple(fcs))
     _NETWORK_PLANS[key] = plan

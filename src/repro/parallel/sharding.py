@@ -30,6 +30,10 @@ __all__ = [
     "SERVE_RULES",
     "use_mesh",
     "active_mesh",
+    "axis_size",
+    "local_dim",
+    "local_gemm_shape",
+    "local_conv_shapes",
     "logical_to_spec",
     "constrain",
     "named_sharding",
@@ -161,6 +165,79 @@ def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
     return n
 
 
+def _present_axes(mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh axes the given mesh does not have (e.g. "pod" on the
+    single-pod mesh), collapsing a surviving 1-tuple to its string.  The one
+    implementation of the drop rule — shared by :func:`logical_to_spec` and
+    the local-shape planners below."""
+    if axes is None or mesh is None:
+        return None
+    present = set(mesh.axis_names)
+    if isinstance(axes, str):
+        return axes if axes in present else None
+    kept = tuple(a for a in axes if a in present)
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else kept
+
+
+def axis_size(mesh, axes: MeshAxes) -> int:
+    """Total shard count over ``axes``, ignoring axes the mesh lacks."""
+    return _axis_size(mesh, _present_axes(mesh, axes))
+
+
+def local_dim(dim: int, mesh, axes: MeshAxes) -> int:
+    """Per-shard extent of ``dim`` sharded over ``axes`` (ceil-div: GSPMD
+    pads the ragged tail shard).  Dims smaller than the shard count stay
+    replicated — the same drop rule :func:`logical_to_spec` applies."""
+    s = axis_size(mesh, axes)
+    if s <= 1 or dim < s:
+        return dim
+    return -(-dim // s)
+
+
+def _resolve_partition(mesh, partition):
+    """The (M, N[, K]) partition to plan against: the caller's, or the
+    mesh's canonical :func:`repro.launch.mesh.gemm_partition` default."""
+    if partition is not None:
+        return partition
+    from repro.launch.mesh import gemm_partition
+
+    return gemm_partition(mesh)
+
+
+def local_gemm_shape(m: int, n: int, k: int, *, mesh, partition=None) -> tuple:
+    """Per-shard (m, n, k) of a logical GEMM under a mesh partition.
+
+    ``partition`` is a PartitionSpec over (M, N[, K]) — M typically over the
+    data-ish axes, N over "model" (K only for reduce-scattered contractions).
+    Defaults to :func:`repro.launch.mesh.gemm_partition` for the mesh.
+    """
+    partition = _resolve_partition(mesh, partition)
+    axes = tuple(partition) + (None,) * (3 - len(tuple(partition)))
+    return tuple(
+        local_dim(d, mesh, a) for d, a in zip((m, n, k), axes[:3])
+    )
+
+
+def local_conv_shapes(x_shape, w_shape, *, mesh, partition=None):
+    """Per-shard (NHWC x, KKIO w) of a conv layer under a mesh partition.
+
+    The conv's GEMM M scales with batch and its N is Cout, so the same
+    (M, N) partition applies: batch over the M axes, output channels over
+    the N axes; spatial dims and Cin stay shard-local (the layer's input
+    activations are gathered over channels between layers).
+    """
+    p = tuple(_resolve_partition(mesh, partition)) + (None, None)
+    batch_axes, cout_axes = p[0], p[1]
+    n, h, w, c = x_shape
+    kh, kw, cin, cout = w_shape
+    return (
+        (local_dim(n, mesh, batch_axes), h, w, c),
+        (kh, kw, cin, local_dim(cout, mesh, cout_axes)),
+    )
+
+
 def logical_to_spec(
     logical: Sequence[Optional[str]],
     *,
@@ -184,15 +261,7 @@ def logical_to_spec(
     for i, name in enumerate(logical):
         axes = rules.get(name)
         if axes is not None and mesh is not None:
-            # drop mesh axes the current mesh does not have (e.g. "pod" on
-            # the single-pod mesh)
-            present = set(mesh.axis_names)
-            if isinstance(axes, str):
-                axes = axes if axes in present else None
-            else:
-                axes = tuple(a for a in axes if a in present) or None
-                if axes is not None and len(axes) == 1:
-                    axes = axes[0]
+            axes = _present_axes(mesh, axes)
         if axes is not None and mesh is not None and dim_sizes is not None:
             if dim_sizes[i] < _axis_size(mesh, axes):
                 axes = None
