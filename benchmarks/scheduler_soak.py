@@ -1,0 +1,122 @@
+"""Scheduler soak: a mixed prefill/decode trace on the virtual clock.
+
+    PYTHONPATH=src python -m benchmarks.scheduler_soak --requests 200 \
+        --out scheduler_stats.json
+
+Replays a deterministic mixed prompt-length arrival trace (every bucket of
+the ladder sees traffic; arrivals part-burst, part-spaced) through the
+continuous-batching scheduler under a :class:`VirtualClock` — no wall-clock
+sleeps, so the soak is pure scheduler + compute work.  Emits the per-bucket
+stats JSON as an artifact.
+
+With ``REPRO_PLAN_ASSERT_WARM=1`` the soak is a CI gate: the plan store
+named by ``REPRO_PLAN_STORE`` must warm-start the registry and the *entire*
+soak — warmup traces included — must incur zero DSE grid searches.  The
+soak never writes the store back (a failing gate must not self-heal on
+retry; the benchmark harness owns persistence).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.core.engine import plan_store_stats, warm_start_plan_store
+from repro.core.template import default_template
+from repro.launch.scheduler import (
+    SchedulerConfig,
+    ServeScheduler,
+    VirtualClock,
+    replay_trace,
+    synthetic_trace,
+)
+from repro.models import transformer as T
+
+LADDER = (8, 16, 32)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--backend", default="pallas", choices=["xla", "pallas", "q16"])
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="scheduler_stats.json",
+                    help="per-bucket stats JSON artifact path ('' = skip)")
+    args = ap.parse_args(argv)
+
+    store_path, loaded = warm_start_plan_store()
+    if loaded:
+        print(f"[soak] plan store: warm-started {loaded} entries from {store_path}")
+    before = plan_store_stats()
+
+    cfg = reduced(get_config(args.arch))
+    tpl = default_template(args.backend)
+    params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
+    sched = ServeScheduler(
+        cfg, params, tpl=tpl, clock=VirtualClock(),
+        sched=SchedulerConfig(ladder=LADDER, slots=args.slots,
+                              max_new_limit=args.gen),
+    )
+    t0 = time.time()
+    sched.warmup()
+    warm_s = time.time() - t0
+    # half the trace arrives as a burst at t=0, half spaced out — both the
+    # saturated and the trickle regime in one soak
+    burst = synthetic_trace(args.requests // 2, seed=args.seed,
+                            vocab=cfg.vocab, ladder=LADDER, max_new=args.gen)
+    spaced = synthetic_trace(args.requests - len(burst), seed=args.seed + 1,
+                             vocab=cfg.vocab, ladder=LADDER, max_new=args.gen,
+                             arrival_every=0.5)
+    t0 = time.time()
+    stats = replay_trace(sched, burst + spaced, tick=0.25)
+    soak_s = time.time() - t0
+
+    after = plan_store_stats()
+    new_misses = after["misses"] - before["misses"]
+    row = {
+        "bench": "scheduler_soak",
+        "arch": cfg.name,
+        "backend": args.backend,
+        "requests": args.requests,
+        "slots": args.slots,
+        "ladder": list(LADDER),
+        "warmup_s": round(warm_s, 2),
+        "soak_s": round(soak_s, 2),
+        "virtual_time": round(sched.clock.now(), 2),
+        "new_dse_misses": new_misses,
+        "warm_started_entries": loaded,
+        **stats,
+    }
+    print(json.dumps({k: v for k, v in row.items() if k != "counters"}))
+    print(f"[soak] {sched.stats_line()}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(row, f, indent=1)
+            f.write("\n")
+        print(f"[soak] per-bucket stats written to {args.out}")
+    if sched.counters["completed"] != args.requests:
+        raise RuntimeError(
+            f"soak incomplete: {sched.counters['completed']}/{args.requests} "
+            "requests completed"
+        )
+    if os.environ.get("REPRO_PLAN_ASSERT_WARM") == "1":
+        if not loaded:
+            raise RuntimeError("ASSERT_WARM set but no plan store was loaded")
+        if new_misses > 0:
+            raise RuntimeError(
+                f"warm-start failed: soak incurred {new_misses} DSE searches "
+                "against a populated store"
+            )
+        print("[soak] warm-start OK: zero DSE searches across the whole soak")
+    return row
+
+
+if __name__ == "__main__":
+    main()

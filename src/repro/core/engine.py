@@ -62,6 +62,7 @@ __all__ = [
     "ConvPlan",
     "GemmPlan",
     "Engine",
+    "bucket_for",
     "default_plan_store_path",
     "load_plan_store",
     "plan_cache_for",
@@ -71,6 +72,24 @@ __all__ = [
     "save_plan_store",
     "warm_start_plan_store",
 ]
+
+
+def bucket_for(length: int, ladder: Sequence[int]) -> Optional[int]:
+    """The bucket-ladder rule: the smallest ladder entry >= length.
+
+    The serve scheduler pads every prefill up to a rung of a small ladder so
+    the engine sees a handful of fixed GEMM shapes — each planned once,
+    registry hits forever after — instead of one shape per prompt length.
+    Returns None when the length exceeds every rung (the request cannot be
+    admitted at this ladder).
+    """
+    if length < 0:
+        raise ValueError(f"negative length {length}")
+    best = None
+    for rung in ladder:
+        if rung >= length and (best is None or rung < best):
+            best = rung
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -219,6 +238,27 @@ class PlanRegistry:
             "misses": self.misses,
             "measured": measured,
         }
+
+    @contextlib.contextmanager
+    def scope(self, into: Optional[dict] = None):
+        """Count hits/misses attributable to one region (per-bucket stats).
+
+        Yields a dict that, on exit, holds the hit/miss *delta* incurred
+        inside the with-block; when ``into`` is given the delta is also
+        accumulated there (``into["hits"] += ...``).  The scheduler wraps
+        each bucket's prefill trace and the decode trace in a scope so its
+        stats line can attribute plan work to individual ladder rungs.
+        """
+        delta = {"hits": 0, "misses": 0}
+        h0, m0 = self.hits, self.misses
+        try:
+            yield delta
+        finally:
+            delta["hits"] = self.hits - h0
+            delta["misses"] = self.misses - m0
+            if into is not None:
+                into["hits"] = into.get("hits", 0) + delta["hits"]
+                into["misses"] = into.get("misses", 0) + delta["misses"]
 
     def __len__(self) -> int:
         return len(self._blocks) + len(self._conv_tiles)
@@ -644,6 +684,21 @@ class Engine:
             m, n, k = lm, ln, lk
         block = None if self.config.backend == "xla" else self.block_for(m, n, k)
         return GemmPlan(m=m, n=n, k=k, block=block, logical=logical)
+
+    def plan_gemm_ladder(
+        self, ladder: Sequence[int], n: int, k: int, *, mesh=None, partition=None
+    ) -> dict:
+        """Plan one GEMM per bucket-ladder rung (M = rung, fixed N/K).
+
+        This is the scheduler's warmup primitive: planning every rung up
+        front guarantees each bucket's shape is in the PlanRegistry before
+        traffic arrives, so a mixed trace replayed against the warm registry
+        (or a persisted store) reports ``misses == 0``.
+        """
+        return {
+            int(m): self.plan_gemm(int(m), n, k, mesh=mesh, partition=partition)
+            for m in sorted(set(ladder))
+        }
 
     def plan_conv(
         self, x_shape, w_shape, *, stride: int = 1, padding=0,

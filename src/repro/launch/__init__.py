@@ -1,1 +1,2 @@
-"""Launchers: production mesh, multi-pod dry-run, training + serving drivers."""
+"""Launchers: production mesh, multi-pod dry-run, training + serving drivers,
+and the continuous-batching serve scheduler (DESIGN.md §7)."""

@@ -1,0 +1,545 @@
+"""Continuous-batching serve scheduler over the execution-plan engine.
+
+The paper's template sustains throughput only while the single on-chip
+compute unit is fed uniformly-shaped work; the serving analogue is a
+scheduler that quantizes *traffic* into the handful of GEMM shapes the
+PlanRegistry already holds plans for (ROADMAP "Serving batch scheduler";
+DESIGN.md §7):
+
+* **Bucket ladder** — every prefill is right-padded up to the smallest
+  ladder rung >= its prompt length (`core/engine.py:bucket_for`).  Under
+  causal attention the padding cannot influence logits at real positions, so
+  a bucket costs only wasted FLOPs, never accuracy; each rung is one fixed
+  prefill shape, planned once (warmup) and a registry hit forever after.
+* **Slot-indexed continuous batching** — decode requests from different
+  sessions are coalesced into ONE batched decode step against a slot-indexed
+  KV cache (`models/transformer.py:init_cache(per_slot=True)`): every batch
+  row is an independent session at its own position t[b].  Slots are
+  allocated on admission (`insert_cache_slot`), freed on EOS/length
+  completion, and reused by later requests — the decode GEMM shape is the
+  constant (slots, ...) regardless of traffic mix.
+* **Injectable clock + event loop** — the scheduler never reads wall time
+  directly; it takes a :class:`SystemClock` in production
+  (``serve.py --scheduler``) and a :class:`VirtualClock` in tests, so the
+  identical `submit`/`step`/`drain` code path is driven deterministically by
+  scripted arrival traces with no sleeps (`tests/test_scheduler.py`).
+
+Also here: :func:`compiled_steps`, the per-(template, config, cache_len)
+memo of jitted prefill/decode closures.  `serve.generate` used to rebuild
+its `jax.jit` wrappers on every call — every call retraced; the memo is
+shared by the scheduler and `generate`, with `TRACE_COUNTS` exposing actual
+trace counts for regression tests.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import bucket_for, register_plan_store
+from repro.core.template import Template, default_template
+from repro.models import transformer as T
+
+__all__ = [
+    "Request",
+    "SchedulerConfig",
+    "ServeScheduler",
+    "SystemClock",
+    "VirtualClock",
+    "TRACE_COUNTS",
+    "compiled_steps",
+    "replay_trace",
+    "synthetic_trace",
+]
+
+
+# ---------------------------------------------------------------------------
+# injectable clocks
+# ---------------------------------------------------------------------------
+
+
+class VirtualClock:
+    """Deterministic simulation clock: time moves only when told to."""
+
+    def __init__(self, start: float = 0.0) -> None:
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        self._t += max(0.0, float(dt))
+
+
+class SystemClock:
+    """Production clock (monotonic)."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+# ---------------------------------------------------------------------------
+# compiled step functions (hoisted jit closures, trace-counted)
+# ---------------------------------------------------------------------------
+
+#: (kind, cfg.name, cache_len) -> number of times the closure body actually
+#: ran under jax tracing.  A repeated `generate()`/scheduler call with
+#: unchanged shapes must not grow these counts.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+_STEP_FNS: dict = {}
+#: LRU bound: generate()'s default cache_len is s+gen, so prompt-length
+#: diversity would otherwise pin one executable pair per distinct length
+#: forever in a long-lived process.
+_STEP_FNS_MAX = 64
+# cleared together with the plan caches so reset_plan_caches() drops the
+# compiled closures too (they capture Templates whose plans just vanished)
+register_plan_store(_STEP_FNS)
+register_plan_store(TRACE_COUNTS)
+
+
+def compiled_steps(tpl: Template, cfg, cache_len: int):
+    """The memoized (prefill_fn, decode_fn) pair for one serving setup.
+
+    prefill_fn(params, tokens, ctx, last_pos) -> (logits (B,V), cache)
+    decode_fn(params, token, t, cache)        -> (logits (B,V), cache')
+
+    Keyed by (template, config, cache_len): repeated `generate()` calls and
+    every scheduler step reuse one pair of jitted callables, so jax's own
+    compilation cache applies — distinct *shapes* still trace once each
+    (that is the bucket ladder's job to bound), but a repeated shape never
+    retraces.  The closure bodies bump :data:`TRACE_COUNTS` — they only run
+    while jax is tracing.
+    """
+    key = (tpl, cfg, int(cache_len))
+    fns = _STEP_FNS.pop(key, None)
+    if fns is None:
+        def _prefill(params, tokens, ctx, last_pos):
+            TRACE_COUNTS["prefill", cfg.name, int(cache_len)] += 1
+            return T.prefill(tpl, cfg, params, tokens, ctx=ctx,
+                             cache_len=cache_len, last_pos=last_pos)
+
+        def _decode(params, token, t, cache):
+            TRACE_COUNTS["decode", cfg.name, int(cache_len)] += 1
+            return T.decode_step(tpl, cfg, params, token, t, cache)
+
+        # the input cache dies the moment a decode step returns — donate it
+        # so XLA aliases the (slots, Hkv, C, D) ring buffers in place instead
+        # of copying the whole KV cache per generated token
+        fns = (jax.jit(_prefill), jax.jit(_decode, donate_argnums=(3,)))
+        while len(_STEP_FNS) >= _STEP_FNS_MAX:
+            _STEP_FNS.pop(next(iter(_STEP_FNS)))
+    _STEP_FNS[key] = fns  # (re-)insert at the LRU tail
+    return fns
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+_RID = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through queued -> active -> completed."""
+
+    prompt: tuple  # prompt token ids
+    max_new: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+    rid: int = dataclasses.field(default_factory=lambda: next(_RID))
+
+    # runtime state (owned by the scheduler)
+    state: str = "new"  # new | queued | active | completed | rejected
+    bucket: int = 0
+    slot: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    t_next: int = 0
+    submitted_at: float = 0.0
+    admitted_at: float = 0.0
+    completed_at: float = 0.0
+    preemptions: int = 0
+    slot_history: list = dataclasses.field(default_factory=list)
+    finish_reason: str = ""
+
+    @property
+    def seq_len(self) -> int:
+        """Tokens a (re-)prefill must process: prompt + already generated."""
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new - len(self.generated)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Admission/batching policy (the ladder is the shape contract)."""
+
+    ladder: tuple = (16, 32, 64)
+    slots: int = 4
+    max_new_limit: int = 32
+    #: ring-cache length; 0 derives max(ladder) + max_new_limit (no wrap)
+    cache_len: int = 0
+    max_queue: int = 256
+    #: preempt the most recently admitted active request once the queue head
+    #: has waited this long with no free slot (None = never preempt)
+    preempt_after: Optional[float] = None
+
+    def resolved_cache_len(self) -> int:
+        return self.cache_len or (max(self.ladder) + self.max_new_limit)
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+
+class ServeScheduler:
+    """Continuous-batching scheduler: FIFO queue, bucketed prefill, one
+    coalesced decode step per tick over a slot-indexed KV cache.
+
+    Padding a prompt is only sound for attention mixers (pad keys are masked
+    out; recurrent/SSM states would absorb the pad tokens), so admission is
+    restricted to families whose every layer mixes by attention.
+    """
+
+    def __init__(self, cfg, params, *, sched: Optional[SchedulerConfig] = None,
+                 tpl: Optional[Template] = None, clock=None) -> None:
+        pattern = T.plan_pattern(cfg)
+        # "local" with a real window is also unsound: its ring cache is only
+        # window-sized, so a bucket-padded prefill longer than the window
+        # evicts *real* keys in favor of pad keys that trimming then voids.
+        bad = [
+            p.mixer for p in pattern
+            if not (p.mixer == "attn" or (p.mixer == "local" and not cfg.window))
+        ]
+        if bad or any(p.cross for p in pattern) or cfg.family in ("encdec", "vlm"):
+            raise ValueError(
+                f"scheduler requires full-attention mixers without context "
+                f"inputs; {cfg.name} ({cfg.family}) has {bad or 'cross-attention'}"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.tpl = tpl or default_template()
+        self.sched = sched or SchedulerConfig()
+        self.clock = clock or SystemClock()
+        self.cache_len = self.sched.resolved_cache_len()
+        if max(self.sched.ladder) > self.cache_len:
+            raise ValueError("cache_len smaller than the largest bucket")
+        self.engine = self.tpl.engine
+        self.registry = self.engine.plan_cache
+        self._prefill, self._decode = compiled_steps(self.tpl, cfg, self.cache_len)
+
+        # compiled slot insertion (one trace per slot index — cache shapes
+        # are bucket-independent); the old batched cache is dead afterwards
+        # and aliases the output 1:1, so donate it (the batch-1 prefill row
+        # cannot alias — its shapes differ from every output)
+        def _ins(cache, row_cache, valid_len, slot):
+            return T.insert_cache_slot(cache, slot, row_cache, valid_len=valid_len)
+
+        self._insert = jax.jit(_ins, static_argnums=(3,), donate_argnums=(0,))
+
+        self.queue: collections.deque = collections.deque()
+        self.active: dict = {}  # slot -> Request
+        self._free: list = sorted(range(self.sched.slots))
+        self.cache = None  # batched slot-indexed cache, built on first admit
+        self.counters: collections.Counter = collections.Counter()
+        self.bucket_stats: dict = {
+            int(b): {"admitted": 0, "prefills": 0, "occupancy": 0,
+                     "hits": 0, "misses": 0}
+            for b in sorted(self.sched.ladder)
+        }
+        self.history: list = []
+        self.results: dict = {}  # rid -> Request (completed)
+
+    # -- warmup --------------------------------------------------------------
+
+    def warmup(self) -> dict:
+        """Trace every bucket's prefill and the coalesced decode step once.
+
+        All plan work (DSE lookups happen at trace time) lands here, scoped
+        per bucket — after warmup a mixed trace replays with ``misses == 0``
+        against the warm registry.  Returns the per-bucket hit/miss deltas.
+        """
+        for b in sorted(self.sched.ladder):
+            toks = jnp.zeros((1, b), jnp.int32)
+            with self.registry.scope(into=self.bucket_stats[b]):
+                jax.block_until_ready(
+                    self._prefill(self.params, toks, None, jnp.int32(b - 1))[0]
+                )
+        cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
+                             per_slot=True)
+        tok = jnp.zeros((self.sched.slots, 1), jnp.int32)
+        tvec = jnp.zeros((self.sched.slots,), jnp.int32)
+        with self.registry.scope() as decode_delta:
+            jax.block_until_ready(
+                self._decode(self.params, tok, tvec, cache)[0]
+            )
+        self.counters["warmup_decode_misses"] += decode_delta["misses"]
+        return {b: dict(s) for b, s in self.bucket_stats.items()}
+
+    # -- admission control ---------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request; False (state=rejected) when admission control
+        refuses it: unknown-bucket length, over-limit generation budget, a
+        sequence that would wrap the ring cache, or a full queue."""
+        self.counters["submitted"] += 1
+        bucket = bucket_for(req.seq_len, self.sched.ladder)
+        fits = (
+            bucket is not None
+            and 0 < req.max_new <= self.sched.max_new_limit
+            and req.seq_len + req.max_new <= self.cache_len
+        )
+        if not fits or len(self.queue) >= self.sched.max_queue:
+            req.state = "rejected"
+            self.counters["rejected"] += 1
+            return False
+        req.bucket = bucket
+        req.state = "queued"
+        req.submitted_at = self.clock.now()
+        self.queue.append(req)
+        return True
+
+    # -- internals -----------------------------------------------------------
+
+    def _complete(self, req: Request, reason: str) -> None:
+        req.state = "completed"
+        req.finish_reason = reason
+        req.completed_at = self.clock.now()
+        if req.slot is not None:
+            self.active.pop(req.slot, None)
+            self._free.append(req.slot)
+            self._free.sort()
+            req.slot = None
+        self.counters["completed"] += 1
+        self.results[req.rid] = req
+
+    def _admit(self, req: Request) -> None:
+        slot = self._free.pop(0)
+        req.slot = slot
+        req.slot_history.append(slot)
+        req.state = "active"
+        req.admitted_at = self.clock.now()
+        self.counters["admitted"] += 1
+
+        s_total = req.seq_len
+        bucket = bucket_for(s_total, self.sched.ladder)
+        req.bucket = bucket
+        bstats = self.bucket_stats[bucket]
+        bstats["admitted"] += 1
+        bstats["prefills"] += 1
+        self.counters["prefills"] += 1
+
+        tokens = np.zeros((1, bucket), np.int32)  # right-pad up to the rung
+        tokens[0, :s_total] = np.asarray(
+            list(req.prompt) + list(req.generated), np.int32
+        )
+        with self.registry.scope(into=bstats):
+            logits, row_cache = self._prefill(
+                self.params, jnp.asarray(tokens), None, jnp.int32(s_total - 1)
+            )
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        self.counters["tokens"] += 1
+        if req.eos_id is not None and tok == req.eos_id:
+            self._complete(req, "eos")
+            return
+        if req.remaining <= 0:
+            self._complete(req, "length")
+            return
+        if self.cache is None:
+            self.cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
+                                      per_slot=True)
+        self.cache = self._insert(self.cache, row_cache, jnp.int32(s_total), slot)
+        req.t_next = s_total
+        self.active[slot] = req
+
+    def _preempt_if_starving(self, now: float) -> Optional[Request]:
+        pa = self.sched.preempt_after
+        if pa is None or not self.queue or self._free or not self.active:
+            return None
+        head = self.queue[0]
+        if now - head.submitted_at < pa:
+            return None
+        # victim: most recently admitted active request that can re-bucket
+        for slot in sorted(self.active,
+                           key=lambda s: (self.active[s].admitted_at, s),
+                           reverse=True):
+            req = self.active[slot]
+            nb = bucket_for(req.seq_len, self.sched.ladder)
+            if nb is not None and req.seq_len + req.remaining <= self.cache_len:
+                self.active.pop(slot)
+                self._free.append(slot)
+                self._free.sort()
+                req.slot = None
+                req.state = "queued"
+                req.preemptions += 1
+                req.submitted_at = now  # waits its turn afresh
+                self.counters["preempted"] += 1
+                return req
+        return None
+
+    # -- the event loop body -------------------------------------------------
+
+    def step(self) -> bool:
+        """One scheduler tick: (maybe) preempt, admit FIFO, one coalesced
+        decode step over all active slots.  Returns whether any work ran."""
+        now = self.clock.now()
+        event = {"now": now, "admitted": [], "completed": [], "preempted": [],
+                 "decoded": 0}
+
+        victim = self._preempt_if_starving(now)
+
+        while self._free and self.queue:
+            req = self.queue.popleft()
+            self._admit(req)
+            event["admitted"].append(req.rid)
+            if req.state == "completed":
+                event["completed"].append((req.rid, req.finish_reason))
+        if victim is not None:
+            self.queue.appendleft(victim)
+            event["preempted"].append(victim.rid)
+
+        if self.active:
+            slots = self.sched.slots
+            tok = np.zeros((slots, 1), np.int32)
+            tvec = np.zeros((slots,), np.int32)
+            for slot, req in self.active.items():
+                tok[slot, 0] = req.generated[-1]
+                tvec[slot] = req.t_next
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(tok), jnp.asarray(tvec), self.cache
+            )
+            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            self.counters["decode_steps"] += 1
+            self.counters["slot_steps"] += len(self.active)
+            event["decoded"] = len(self.active)
+            for slot in sorted(self.active):
+                req = self.active[slot]
+                self.bucket_stats[req.bucket]["occupancy"] += 1
+                t = int(next_tok[slot])
+                req.generated.append(t)
+                req.t_next += 1
+                self.counters["tokens"] += 1
+            for slot in sorted(self.active):
+                req = self.active[slot]
+                if req.eos_id is not None and req.generated[-1] == req.eos_id:
+                    self._complete(req, "eos")
+                    event["completed"].append((req.rid, "eos"))
+                elif req.remaining <= 0:
+                    self._complete(req, "length")
+                    event["completed"].append((req.rid, "length"))
+
+        worked = bool(event["admitted"] or event["decoded"] or event["preempted"])
+        if worked:
+            self.history.append(event)
+        return worked
+
+    def drain(self, *, tick: float = 0.0, max_steps: int = 100_000) -> None:
+        """Run the event loop until queue and slots are empty."""
+        for _ in range(max_steps):
+            if not (self.queue or self.active):
+                return
+            self.step()
+            self.clock.sleep(tick)
+        raise RuntimeError(f"scheduler did not drain in {max_steps} steps")
+
+    # -- reporting -----------------------------------------------------------
+
+    def stats(self) -> dict:
+        c = self.counters
+        reg = self.registry.stats()
+        return {
+            "counters": dict(c),
+            "mean_occupancy": round(c["slot_steps"] / max(c["decode_steps"], 1), 3),
+            "buckets": {b: dict(s) for b, s in self.bucket_stats.items()},
+            "registry": reg,
+        }
+
+    def stats_line(self) -> str:
+        c = self.counters
+        occ = c["slot_steps"] / max(c["decode_steps"], 1)
+        per_bucket = " ".join(
+            f"{b}:{s['admitted']}a/{s['occupancy']}o/{s['misses']}m"
+            for b, s in sorted(self.bucket_stats.items())
+        )
+        return (
+            f"scheduler: submitted={c['submitted']} admitted={c['admitted']} "
+            f"completed={c['completed']} rejected={c['rejected']} "
+            f"preempted={c['preempted']} prefills={c['prefills']} "
+            f"decode_steps={c['decode_steps']} tokens={c['tokens']} "
+            f"mean_occupancy={occ:.2f} | buckets[adm/occ/miss] {per_bucket}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# trace replay (the simulation harness — same loop production uses)
+# ---------------------------------------------------------------------------
+
+
+def replay_trace(sched: ServeScheduler, requests: Sequence[Request], *,
+                 tick: float = 1.0, max_steps: int = 100_000) -> dict:
+    """Drive the scheduler from a scripted arrival trace.
+
+    ``arrival`` times are offsets from the start of the replay (the injected
+    clock's reading at entry — a SystemClock reports absolute monotonic
+    time, a VirtualClock usually 0): submissions become due as the clock
+    passes start + arrival; when the scheduler is idle the clock jumps
+    (virtual) or the process sleeps (production clock) to the next arrival.
+    One `step()` per ``tick`` of clock time.  Returns `sched.stats()` once
+    everything drains.
+    """
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    pending = collections.deque(pending)
+    t0 = sched.clock.now()
+    for _ in range(max_steps):
+        elapsed = sched.clock.now() - t0
+        while pending and pending[0].arrival <= elapsed:
+            sched.submit(pending.popleft())
+        if not (sched.queue or sched.active):
+            if not pending:
+                return sched.stats()
+            sched.clock.sleep(pending[0].arrival - elapsed)
+            continue
+        sched.step()
+        sched.clock.sleep(tick)
+    raise RuntimeError(f"trace did not drain in {max_steps} steps")
+
+
+def synthetic_trace(n: int, *, seed: int = 0, vocab: int = 128,
+                    ladder: Sequence[int] = (16, 32, 64), max_new: int = 8,
+                    arrival_every: float = 0.0, eos_id: Optional[int] = None) -> list:
+    """A deterministic mixed prompt-length trace (for benchmarks / soak).
+
+    Lengths sweep the full ladder (from just-above the previous rung to the
+    rung itself) so every bucket sees traffic; ``arrival_every > 0`` spaces
+    arrivals out (uniform trace), 0 makes the trace bursty (all at t=0).
+    """
+    rng = np.random.default_rng(seed)
+    lo = [1] + [int(b) + 1 for b in sorted(ladder)[:-1]]
+    hi = sorted(int(b) for b in ladder)
+    reqs = []
+    for i in range(n):
+        j = int(rng.integers(0, len(hi)))
+        length = int(rng.integers(lo[j], hi[j] + 1))
+        prompt = tuple(int(x) for x in rng.integers(0, vocab, size=length))
+        reqs.append(Request(
+            prompt=prompt,
+            max_new=int(rng.integers(1, max_new + 1)),
+            eos_id=eos_id,
+            arrival=i * arrival_every,
+        ))
+    return reqs

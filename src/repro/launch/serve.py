@@ -14,26 +14,39 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.engine import PLAN_STORE_ENV, save_plan_store, warm_start_plan_store
 from repro.core.template import default_template
 from repro.data.pipeline import synthetic_batch
+from repro.launch.scheduler import (
+    Request,
+    SchedulerConfig,
+    ServeScheduler,
+    SystemClock,
+    compiled_steps,
+    replay_trace,
+)
 from repro.models import transformer as T
 
 
 def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
              greedy=True, tpl=None):
-    """Prefill + autoregressive decode.  tokens: (B, S) prompts."""
+    """Prefill + autoregressive decode.  tokens: (B, S) prompts.
+
+    The jitted prefill/decode closures are hoisted into the
+    `scheduler.compiled_steps` memo (keyed by template, config, cache_len):
+    repeated calls — and the continuous-batching scheduler, which shares the
+    memo — reuse one pair of compiled callables instead of retracing per
+    call.
+    """
     tpl = tpl or default_template()
     b, s = tokens.shape
     cache_len = cache_len or (s + gen)
+    prefill, decode = compiled_steps(tpl, cfg, cache_len)
 
-    prefill = jax.jit(lambda p, tk, cx: T.prefill(tpl, cfg, p, tk, ctx=cx,
-                                                  cache_len=cache_len))
-    decode = jax.jit(lambda p, tok, t, c: T.decode_step(tpl, cfg, p, tok, t, c))
-
-    logits, cache = prefill(params, tokens, ctx)
+    logits, cache = prefill(params, tokens, ctx, jnp.int32(s - 1))
     out = []
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     out.append(tok)
@@ -44,6 +57,30 @@ def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
     return jnp.concatenate(out, axis=1)
 
 
+def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
+                  gen: int, seed: int, clock=None) -> ServeScheduler:
+    """Serve a mixed-length synthetic request set through the
+    continuous-batching scheduler (the production path of DESIGN.md §7)."""
+    ladder = tuple(sorted({max(4, prompt_len // 2), prompt_len, 2 * prompt_len}))
+    sched = ServeScheduler(
+        cfg, params, tpl=tpl, clock=clock or SystemClock(),
+        # this path serves exactly `requests` requests, all arriving at t=0 —
+        # the queue must hold the whole burst, rejection is not policy here
+        sched=SchedulerConfig(ladder=ladder, slots=4, max_new_limit=max(gen, 1),
+                              max_queue=max(256, requests)),
+    )
+    sched.warmup()
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(requests):
+        length = int(rng.integers(max(2, prompt_len // 2), 2 * prompt_len + 1))
+        prompt = synthetic_batch(seed, len(trace), 1, length, cfg.vocab)
+        trace.append(Request(prompt=tuple(int(t) for t in np.asarray(prompt)[0]),
+                             max_new=gen))
+    replay_trace(sched, trace, tick=0.0)
+    return sched
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -52,6 +89,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching scheduler "
+                         "(mixed-length requests, bucketed prefill, coalesced "
+                         "decode; DESIGN.md §7)")
     ap.add_argument("--plan-store", default=None,
                     help=f"persisted plan-store path (default: ${PLAN_STORE_ENV})")
     args = ap.parse_args(argv)
@@ -64,29 +105,44 @@ def main(argv=None):
 
     cfg = reduced(get_config(args.arch))
     params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
-    tokens = synthetic_batch(args.seed, 0, args.prompts, args.prompt_len, cfg.vocab)
-    ctx = None
-    if cfg.family == "encdec":
-        ctx = jax.random.normal(
-            jax.random.PRNGKey(1), (args.prompts, cfg.n_frames, cfg.d_model)
-        ) * 0.1
-    elif cfg.family == "vlm":
-        ctx = jax.random.normal(
-            jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
-        ) * 0.1
 
     # One template (and thus one execution engine + shared plan cache) for the
     # whole serve session: prefill and every decode step reuse the same plan,
     # so DSE block selection runs at most once per distinct GEMM shape.
     tpl = default_template(args.backend)
     t0 = time.time()
-    gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl)
-    dt = time.time() - t0
-    pc = tpl.engine.plan_cache
-    st = pc.stats()
-    print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
-          f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
-          f"in {dt:.2f}s ({args.prompts * args.gen / dt:.1f} tok/s)")
+    if args.scheduler:
+        try:
+            sched = run_scheduler(cfg, params, tpl, requests=args.prompts,
+                                  prompt_len=args.prompt_len, gen=args.gen,
+                                  seed=args.seed)
+        except ValueError as err:  # admission policy lives in ServeScheduler
+            raise SystemExit(f"--scheduler: {err}") from err
+        dt = time.time() - t0
+        n_tok = sched.counters["tokens"]
+        print(f"[serve] arch={cfg.name} backend={args.backend} "
+              f"scheduler requests={args.prompts} generated={n_tok} tokens "
+              f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        print(f"[serve] {sched.stats_line()}")
+        gen = [sched.results[r].generated for r in sorted(sched.results)]
+    else:
+        tokens = synthetic_batch(args.seed, 0, args.prompts, args.prompt_len,
+                                 cfg.vocab)
+        ctx = None
+        if cfg.family == "encdec":
+            ctx = jax.random.normal(
+                jax.random.PRNGKey(1), (args.prompts, cfg.n_frames, cfg.d_model)
+            ) * 0.1
+        elif cfg.family == "vlm":
+            ctx = jax.random.normal(
+                jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
+            ) * 0.1
+        gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl)
+        dt = time.time() - t0
+        print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
+              f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "
+              f"in {dt:.2f}s ({args.prompts * args.gen / dt:.1f} tok/s)")
+    st = tpl.engine.plan_cache.stats()
     print(f"[serve] plan registry: {st['gemm_blocks']} GEMM blocks + "
           f"{st['conv_tiles']} conv tiles planned "
           f"({st['measured']} measured), {st['misses']} DSE searches, "
@@ -95,8 +151,8 @@ def main(argv=None):
         save_plan_store(store_path)
         print(f"[serve] plan store: saved to {store_path}")
     print("[serve] sample generations:")
-    for row in gen[: min(2, args.prompts)]:
-        print("   ", row.tolist())
+    for row in gen[: min(2, len(gen))]:
+        print("   ", list(np.asarray(row).tolist()))
     return gen
 
 

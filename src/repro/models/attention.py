@@ -13,6 +13,12 @@ itself runs on the XLA plane (GSPMD shards it) with two strategies:
 Cache layout per layer: {"k","v": (B, Hkv, C, D), "pos": (C,) int32} — a ring
 buffer (slot = pos % C) so sliding-window layers carry only window-sized
 caches (the long_500k cell for hybrid archs).
+
+Slot-indexed (continuous-batching) variant: with ``per_slot=True`` the pos
+vector is per-batch-row — (B, C) — and ``decode_attention`` accepts a
+*vector* position t: (B,), so every batch row can sit at a different decode
+position.  This is the cache layout the serve scheduler
+(`launch/scheduler.py`) coalesces independent sessions into.
 """
 from __future__ import annotations
 
@@ -72,11 +78,16 @@ def attention_axes(cfg, bias=None) -> dict:
     return ax
 
 
-def init_layer_cache(batch: int, n_kv: int, cache_len: int, head_dim: int, dtype) -> dict:
+def init_layer_cache(batch: int, n_kv: int, cache_len: int, head_dim: int, dtype,
+                     per_slot: bool = False) -> dict:
+    """Zero k/v ring cache.  ``per_slot`` gives each batch row its own pos
+    vector — (B, C) instead of the shared (C,) — so rows can decode at
+    independent positions (continuous batching)."""
+    pos_shape = (batch, cache_len) if per_slot else (cache_len,)
     return {
         "k": jnp.zeros((batch, n_kv, cache_len, head_dim), dtype),
         "v": jnp.zeros((batch, n_kv, cache_len, head_dim), dtype),
-        "pos": jnp.full((cache_len,), -1, jnp.int32),
+        "pos": jnp.full(pos_shape, -1, jnp.int32),
     }
 
 
@@ -384,7 +395,8 @@ def decode_attention(
     head_dim: Optional[int] = None,
     use_rope: Optional[bool] = None,
 ):
-    """One decode step.  x: (B, 1, d); t: scalar int32 current position.
+    """One decode step.  x: (B, 1, d); t: scalar int32 position, or — with a
+    slot-indexed cache (pos: (B, C)) — a per-row position vector t: (B,).
 
     Self-attention (cross=False) appends the new kv at slot t % C and masks
     by stored positions; cross-attention reads a static cache (no update).
@@ -395,10 +407,18 @@ def decode_attention(
     hd = head_dim or cfg.head_dim
     rope = (cfg.use_rope if use_rope is None else use_rope) and not cross
 
-    tpos = jnp.asarray(t, jnp.int32).reshape(())
+    b = x.shape[0]
+    per_slot = (not cross) and cache["pos"].ndim == 2
+    tpos = jnp.asarray(t, jnp.int32)
+    if per_slot:
+        tpos = jnp.broadcast_to(tpos.reshape(-1), (b,))  # scalar t -> every row
+        q_positions = tpos[:, None]  # (B, 1)
+    else:
+        tpos = tpos.reshape(())
+        q_positions = tpos[None]  # (1,)
     q = _split_heads(dense(tpl, p["wq"], x), h)
     if rope:
-        q = apply_rope(q, tpos[None], cfg.rope_theta)
+        q = apply_rope(q, q_positions, cfg.rope_theta)
 
     if cross:
         k, v = cache["k"], cache["v"]  # (B,Hkv,T,D) static
@@ -410,22 +430,37 @@ def decode_attention(
         k_new = _split_heads(dense(tpl, p["wk"], x), kvh)
         v_new = _split_heads(dense(tpl, p["wv"], x), kvh)
         if rope:
-            k_new = apply_rope(k_new, tpos[None], cfg.rope_theta)
-        k = jax.lax.dynamic_update_slice(
-            cache["k"], k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
-            (0, 0, slot, 0),
-        )
-        v = jax.lax.dynamic_update_slice(
-            cache["v"], v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
-            (0, 0, slot, 0),
-        )
-        pos = jax.lax.dynamic_update_slice(cache["pos"], tpos[None], (slot,))
+            k_new = apply_rope(k_new, q_positions, cfg.rope_theta)
+        if per_slot:
+            # each row writes its own ring slot: (b, :, slot[b]) scatter
+            rows = jnp.arange(b)
+            k = cache["k"].at[rows, :, slot].set(
+                k_new.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["k"].dtype)
+            )
+            v = cache["v"].at[rows, :, slot].set(
+                v_new.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["v"].dtype)
+            )
+            pos = cache["pos"].at[rows, slot].set(tpos)
+            tcol = tpos[:, None]  # (B, 1) against pos (B, C)
+        else:
+            k = jax.lax.dynamic_update_slice(
+                cache["k"], k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                (0, 0, slot, 0),
+            )
+            v = jax.lax.dynamic_update_slice(
+                cache["v"], v_new.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                (0, 0, slot, 0),
+            )
+            pos = jax.lax.dynamic_update_slice(cache["pos"], tpos[None], (slot,))
+            tcol = tpos
         new_cache = {"k": k, "v": v, "pos": pos}
-        valid = (pos >= 0) & (pos <= tpos)
+        valid = (pos >= 0) & (pos <= tcol)
         if window:
-            valid &= pos > tpos - window
+            valid &= pos > tcol - window
 
-    mask = jnp.broadcast_to(valid[None, None, None, :], (x.shape[0], 1, 1, k.shape[2]))
+    if valid.ndim == 1:
+        valid = valid[None]
+    mask = jnp.broadcast_to(valid[:, None, None, :], (b, 1, 1, k.shape[2]))
     out = _sdpa_dense(q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), mask)
-    out = dense(tpl, p["wo"], out.reshape(x.shape[0], 1, h * hd))
+    out = dense(tpl, p["wo"], out.reshape(b, 1, h * hd))
     return out, new_cache

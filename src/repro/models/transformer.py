@@ -66,6 +66,7 @@ __all__ = [
     "decode_step",
     "init_cache",
     "cache_axes",
+    "insert_cache_slot",
 ]
 
 
@@ -483,8 +484,14 @@ def loss_fn(tpl: Template, cfg, params, batch, aux_weight: float = 0.01):
 
 
 def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
-            cache_len: Optional[int] = None):
-    """Process the prompt; return (last-position logits (B,V), decode cache)."""
+            cache_len: Optional[int] = None, last_pos=None):
+    """Process the prompt; return (last-position logits (B,V), decode cache).
+
+    ``last_pos`` (scalar or (B,) int32, traced) selects which position's
+    logits to return — the default is the final position s-1.  The serve
+    scheduler pads prompts up to a bucket length and reads the logits at the
+    *real* last token, which under causal attention are unaffected by the
+    right-padding."""
     s = tokens.shape[1]
     cache_len = cache_len or s
     h = _embed_tokens(cfg, params, tokens)
@@ -497,7 +504,15 @@ def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
         tpl, cfg, params, h, pattern=pattern, mode="prefill",
         positions=jnp.arange(s), ctx=ctx, cache_len=cache_len,
     )
-    logits = _head(tpl, cfg, params, h[:, -1:])
+    if last_pos is None:
+        h_last = h[:, -1:]
+    else:
+        lp = jnp.asarray(last_pos, jnp.int32)
+        if lp.ndim == 0:
+            h_last = jax.lax.dynamic_slice_in_dim(h, lp, 1, axis=1)
+        else:  # per-row last positions
+            h_last = jnp.take_along_axis(h, lp[:, None, None].astype(jnp.int32), axis=1)
+    logits = _head(tpl, cfg, params, h_last)
     return logits[:, 0], cache
 
 
@@ -508,17 +523,23 @@ def _sinusoid_at(t, d, dtype):
 
 
 def decode_step(tpl: Template, cfg, params, token, t, cache):
-    """One decode step.  token: (B,1) int32, t: scalar int32 position.
+    """One decode step.  token: (B,1) int32; t: scalar int32 position, or a
+    per-row (B,) position vector when the cache is slot-indexed
+    (``init_cache(..., per_slot=True)`` — continuous batching).
 
     Returns (logits (B,V), new_cache)."""
-    t = jnp.asarray(t, jnp.int32).reshape(())
+    t = jnp.asarray(t, jnp.int32)
+    t = t.reshape(()) if t.ndim == 0 else t.reshape(-1)
     h = _embed_tokens(cfg, params, token)
     if getattr(cfg, "abs_pos", False):
-        h = h + _sinusoid_at(t, cfg.d_model, h.dtype)[None, None]
+        if t.ndim:
+            h = h + jax.vmap(lambda tt: _sinusoid_at(tt, cfg.d_model, h.dtype))(t)[:, None]
+        else:
+            h = h + _sinusoid_at(t, cfg.d_model, h.dtype)[None, None]
     pattern, _, _ = _split(cfg)
     h, cache, _ = _run_stack(
         tpl, cfg, params, h, pattern=pattern, mode="decode",
-        positions=t[None], t=t, cache=cache,
+        positions=t, t=t, cache=cache,
     )
     logits = _head(tpl, cfg, params, h)
     return logits[:, 0], cache
@@ -537,11 +558,13 @@ def _ctx_len(cfg) -> int:
     return 0
 
 
-def _init_layer_cache(cfg, plan: LayerPlan, batch, cache_len, dtype, filled_ctx=True):
+def _init_layer_cache(cfg, plan: LayerPlan, batch, cache_len, dtype,
+                      filled_ctx=True, per_slot=False):
     c = {}
     if plan.mixer in ("attn", "local"):
         clen = min(cfg.window, cache_len) if (plan.mixer == "local" and cfg.window) else cache_len
-        c["attn"] = init_layer_cache(batch, cfg.n_kv_heads, clen, cfg.head_dim, dtype)
+        c["attn"] = init_layer_cache(batch, cfg.n_kv_heads, clen, cfg.head_dim,
+                                     dtype, per_slot=per_slot)
     elif plan.mixer == "rec":
         c["rec"] = rec_mod.init_rglru_cache(cfg, batch, dtype)
     elif plan.mixer == "ssm":
@@ -555,21 +578,85 @@ def _init_layer_cache(cfg, plan: LayerPlan, batch, cache_len, dtype, filled_ctx=
     return c
 
 
-def init_cache(cfg, batch: int, cache_len: int, dtype=None):
-    """Zero-initialized decode cache with the exact prefill-cache structure."""
+def init_cache(cfg, batch: int, cache_len: int, dtype=None, *, per_slot: bool = False):
+    """Zero-initialized decode cache with the exact prefill-cache structure.
+
+    ``per_slot=True`` builds the slot-indexed layout (self-attention pos
+    vectors become (B, C)) used by the continuous-batching scheduler, where
+    each batch row is an independent session at its own decode position."""
     dtype = jnp.dtype(dtype or cfg.dtype)
     pattern, g, r = _split(cfg)
 
     def stacked(plan):
-        one = _init_layer_cache(cfg, plan, batch, cache_len, dtype)
+        one = _init_layer_cache(cfg, plan, batch, cache_len, dtype, per_slot=per_slot)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (g, *a.shape)), one)
 
     return {
         "blocks": tuple(stacked(p) for p in pattern),
         "tail": tuple(
-            _init_layer_cache(cfg, pattern[j], batch, cache_len, dtype)
+            _init_layer_cache(cfg, pattern[j], batch, cache_len, dtype,
+                              per_slot=per_slot)
             for j in range(r)
         ),
+    }
+
+
+def _trim_cache_positions(cache_part, valid_len):
+    """Invalidate self-attention cache entries at positions >= valid_len.
+
+    A bucket-padded prefill fills ring slots for the pad positions too; those
+    entries must be masked out (pos = -1) before decode reaches position
+    valid_len, or the pad keys become visible.  Cross caches (static context)
+    are left untouched; rec/ssm states have no positional validity to trim —
+    padding is unsound for them in the first place (the scheduler only admits
+    attention-mixer families).
+    """
+    vl = jnp.asarray(valid_len, jnp.int32)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, sub in node.items():
+                if key == "attn" and isinstance(sub, dict) and "pos" in sub:
+                    pos = sub["pos"]
+                    out[key] = {**sub, "pos": jnp.where(pos < vl, pos, -1)}
+                else:
+                    out[key] = walk(sub)
+            return out
+        if isinstance(node, tuple):
+            return tuple(walk(x) for x in node)
+        return node
+
+    return walk(cache_part)
+
+
+def insert_cache_slot(cache, slot: int, row_cache, *, valid_len=None):
+    """Write a batch-1 prefill cache into row ``slot`` of a batched cache.
+
+    ``cache`` is a (possibly slot-indexed) batched decode cache from
+    :func:`init_cache`; ``row_cache`` is the cache returned by a batch-1
+    :func:`prefill` with the same cache_len.  ``valid_len`` (the real prompt
+    length) invalidates the pad positions a bucket-padded prefill filled.
+    Leaves stack the batch at axis 1 under "blocks" (scan-group leading axis)
+    and axis 0 under "tail"; per-slot pos rows — (C,) in the row cache,
+    (B, C) batched — are detected by the ndim difference.  Returns the new
+    cache (functional update; slot reuse is just a later insert).
+    """
+    if valid_len is not None:
+        row_cache = _trim_cache_positions(row_cache, valid_len)
+
+    def ins(batch_axis):
+        def put(dst, src):
+            idx = (slice(None),) * batch_axis + (slot,)
+            if src.ndim == dst.ndim:  # batched leaf: drop the size-1 batch dim
+                src = jnp.squeeze(src, axis=batch_axis)
+            return dst.at[idx].set(src.astype(dst.dtype))
+
+        return put
+
+    return {
+        "blocks": jax.tree.map(ins(1), cache["blocks"], row_cache["blocks"]),
+        "tail": jax.tree.map(ins(0), cache["tail"], row_cache["tail"]),
     }
 
 
