@@ -211,6 +211,44 @@ def plan_store_warm_start_row() -> dict:
     }
 
 
+def q16_residency_row() -> dict:
+    """Fixed-point residency oracle row (DESIGN.md §8), as JSON.
+
+    Runs the grid-resident LeNet forward (exactly one quantize + one
+    dequantize for the whole network, asserted via engine counters) and
+    reports end-to-end drift vs float plus the structural per-token /
+    per-sample activation bytes of the q16 vs float paths — the q16 side
+    must move at most half the bytes.
+    """
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.q16_drift import (
+        lenet_row, transformer_decode_bytes,
+    )
+    from repro.configs import get_config, reduced
+
+    lenet = lenet_row(batches=2)
+    cfg = reduced(get_config("qwen2-0.5b"))
+    row = {
+        "bench": "q16_residency",
+        "lenet_argmax_agreement": lenet["argmax_agreement"],
+        "lenet_logit_mae": lenet["logit_mae"],
+        "lenet_quantize_calls_per_fwd": lenet["quantize_calls"] // lenet["batches"],
+        "lenet_dequantize_calls_per_fwd": lenet["dequantize_calls"] // lenet["batches"],
+        "lenet_act_bytes": {"float": lenet["act_bytes_float"],
+                            "q16": lenet["act_bytes_q16"]},
+        "transformer_per_token_bytes": {
+            "float": transformer_decode_bytes(cfg, 48, act_bytes=4, kv_bytes=4),
+            "q16": transformer_decode_bytes(cfg, 48, act_bytes=2, kv_bytes=2),
+        },
+    }
+    b = row["transformer_per_token_bytes"]
+    row["bytes_ratio"] = round(b["q16"] / b["float"], 3)
+    return row
+
+
 def scheduler_mixed_trace_row() -> dict:
     """Continuous-batching mixed-trace throughput row, as JSON.
 
@@ -297,6 +335,16 @@ def main():
     print(json.dumps(warm_row))
     assert warm_row["warm_misses"] == 0, "warm registry must not re-search"
     assert warm_row["cold_misses"] == warm_row["entries"]
+    print("\n== q16 fixed-point residency (JSON, append-able trajectory) ==")
+    qrow = q16_residency_row()
+    print(json.dumps(qrow))
+    assert qrow["lenet_quantize_calls_per_fwd"] == 1, \
+        "grid-resident LeNet must quantize only its input"
+    assert qrow["lenet_dequantize_calls_per_fwd"] == 1, \
+        "grid-resident LeNet must dequantize only its classifier read-out"
+    assert qrow["bytes_ratio"] <= 0.5, \
+        "q16 per-token activation bytes must be at most half the float path"
+    assert qrow["lenet_argmax_agreement"] >= 0.99
     print("\n== continuous-batching mixed trace (JSON, append-able trajectory) ==")
     sched_row = scheduler_mixed_trace_row()
     print(json.dumps(sched_row))

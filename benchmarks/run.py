@@ -6,6 +6,7 @@
   table2          — paper Table 2 (vs Bjerge et al. on Ultra96)
   dse_sweep       — paper §III.E tau≈2mu finding + TPU block DSE
   kernel_table    — Pallas compute-unit structural metrics + oracle check
+  q16_drift       — end-to-end fixed-point drift + per-token bytes (§8)
   scheduler_soak  — continuous-batching mixed-trace soak (virtual clock)
   roofline_report — §Roofline table from the dry-run cache (if present)
 """
@@ -29,7 +30,8 @@ def main():
         print(f"[plan-store] warm-started {n} entries from {store_path}")
 
     failures = []
-    for name in ("table1", "table2", "dse_sweep", "kernel_table", "scheduler_soak"):
+    for name in ("table1", "table2", "dse_sweep", "kernel_table", "q16_drift",
+                 "scheduler_soak"):
         print("\n" + "=" * 72)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])

@@ -1,11 +1,14 @@
 """Paper-faithful end-to-end example: LeNet on the unified compute unit with
-Q2.14 quantization-aware training, evaluated with the fixed-point GEMM path.
+Q2.14 quantization-aware training, deployed on the grid-resident QTensor path.
 
 This is the paper's deployment story in miniature:
   1. train float (conv + FC all routed through the Template compute unit)
   2. fine-tune with fake-quant Q2.14 (straight-through estimator)
-  3. deploy: inference through the int16 Q2.14 kernel path ("q16" backend),
-     the numerics an FPGA build of the paper's template executes.
+  3. deploy: calibrate the activation grid from one batch, quantize the
+     weights **once** into QTensors, and run inference entirely in int16
+     fixed point — the whole network performs exactly one quantize (the
+     input) and one dequantize (the classifier read-out), the stay-on-grid
+     dataflow an FPGA build of the paper's template executes (DESIGN.md §8).
 
     PYTHONPATH=src python examples/train_lenet_q214.py
 """
@@ -14,7 +17,13 @@ import jax.numpy as jnp
 
 from repro.core.template import default_template
 from repro.data.pipeline import synthetic_images
-from repro.models.cnn import LENET, cnn_forward, init_cnn
+from repro.models.cnn import (
+    LENET,
+    calibrate_cnn_policy,
+    cnn_forward,
+    init_cnn,
+    quantize_cnn_params,
+)
 from repro.optim import AdamW, adamw_init, adamw_update
 
 
@@ -66,14 +75,35 @@ def main():
     acc_q = accuracy(tpl, params, 1000, quantized=True)
     print(f"\naccuracy float={acc_f:.2%}  fake-quant Q2.14={acc_q:.2%}")
 
-    # deployment numerics: the int16 fixed-point kernel path end to end
+    # deployment numerics: calibrate once, quantize weights once, then run
+    # the whole network grid-resident in int16 (QTensor path, DESIGN.md §8)
     tpl_q16 = default_template("q16")
+    cal_img, _ = synthetic_images(7, 0, 16, 32, 1, 10)
+    policy = calibrate_cnn_policy(tpl_q16, LENET, params, cal_img)
+    qparams = quantize_cnn_params(tpl_q16, LENET, params, policy)
+    print(f"\ndeploy: activations on {policy.fmt.name} (max-abs calibrated), "
+          f"weights per-tensor Qm.n, quantized once")
+
+    eng = tpl_q16.engine
+    q0, d0 = eng.counters["quantize_calls"], eng.counters["dequantize_calls"]
     img, lab = synthetic_images(99, 2000, 16, 32, 1, 10)
     lf = cnn_forward(tpl, LENET, params, img, quantized=True)
-    lq = cnn_forward(tpl_q16, LENET, params, img, quantized=True)
+    lq = cnn_forward(tpl_q16, LENET, qparams, img, policy=policy)
     agree = float((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean())
-    print(f"q16-kernel vs float-backend argmax agreement: {agree:.2%} "
+    print(f"grid-resident q16 vs float-backend argmax agreement: {agree:.2%} "
           f"(max |logit diff| {float(jnp.abs(lf - lq).max()):.4f})")
+    print(f"float islands crossed per forward: "
+          f"{eng.counters['quantize_calls'] - q0} quantize / "
+          f"{eng.counters['dequantize_calls'] - d0} dequantize "
+          f"(input + classifier read-out only)")
+
+    # quantize-once: a second inference call reuses the cached qparams —
+    # the engine's qparam cache reports a hit, not a rebuild
+    b0 = eng.counters["qparam_builds"]
+    qparams2 = quantize_cnn_params(tpl_q16, LENET, params, policy)
+    assert qparams2 is qparams and eng.counters["qparam_builds"] == b0
+    print(f"qparam cache: {eng.counters['qparam_builds']} build(s), "
+          f"{eng.counters['qparam_cache_hits']} hit(s) — weights quantized once")
 
 
 if __name__ == "__main__":

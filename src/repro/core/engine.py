@@ -49,7 +49,15 @@ import jax
 import jax.numpy as jnp
 
 from . import dse
-from .quantization import QFormat, dequantize, fake_quant_fmt, quantize
+from .quantization import (
+    NumericsPolicy,
+    QFormat,
+    QTensor,
+    dequantize,
+    fake_quant_fmt,
+    quantize,
+    quantize_qtensor,
+)
 from .tiling import MatmulBlock, TPU_V5E, TpuSpec, clamp_block
 
 __all__ = [
@@ -64,6 +72,7 @@ __all__ = [
     "Engine",
     "bucket_for",
     "default_plan_store_path",
+    "validate_policy",
     "load_plan_store",
     "plan_cache_for",
     "plan_store_stats",
@@ -629,6 +638,23 @@ def _resolve_pad(padding, kh: int) -> int:
     return {"SAME": kh // 2, "VALID": 0}[padding]
 
 
+def validate_policy(config, policy: Optional[NumericsPolicy]) -> NumericsPolicy:
+    """Check a numerics policy against a template config (DESIGN.md §8).
+
+    A quantized policy only makes sense on the q16 backend (the float
+    backends would silently run the QTensor raws as numbers); rejecting the
+    combo here gives serve/scheduler callers one clear error instead of
+    garbage logits.  Returns the resolved policy (float when ``None``).
+    """
+    policy = policy or NumericsPolicy("float")
+    if policy.quantized and config.backend != "q16":
+        raise ValueError(
+            f"NumericsPolicy('q16') requires the 'q16' backend, but the "
+            f"template is configured with backend={config.backend!r}"
+        )
+    return policy
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -652,6 +678,13 @@ class Engine:
         # but still the caller's requested isolated cache
         self.plan_cache = plan_cache if plan_cache is not None else plan_cache_for(config.hw)
         self.counters: collections.Counter = collections.Counter()
+        # quantized-param cache: (id(params), policy) -> (params, qparams).
+        # The strong ref to the source tree both prevents id-reuse aliasing
+        # and documents the contract: weights are quantized exactly once per
+        # (param tree, policy) per engine (DESIGN.md §8).
+        self._qparam_cache: dict = {}
+        self._calibrating = False
+        self._act_maxabs = 0.0
 
     # -- planning ------------------------------------------------------------
 
@@ -751,6 +784,242 @@ class Engine:
         block = self.block_for(*gemm)
         return ConvPlan("im2col", stride, pad, 0, block, gemm, block.vmem_bytes())
 
+    # -- fixed-point residency (the QTensor plane, DESIGN.md §8) -------------
+
+    def quant(self, x, fmt: Optional[QFormat] = None) -> QTensor:
+        """Float -> QTensor on the activation grid — a counted island *exit*.
+
+        ``quantize_calls`` is the residency enforcement counter: between two
+        consecutive grid-resident ops it must not tick, so a test tracing one
+        q16 decode step can assert the count equals exactly the number of
+        designated float islands (DESIGN.md §8).
+        """
+        if isinstance(x, QTensor):
+            return x
+        fmt = fmt or self.config.qformat
+        self.counters["quantize_calls"] += 1
+        if self._calibrating:
+            # debug.callback so recording survives scan/jit tracing: the
+            # concrete per-site max reaches the host at execution time
+            jax.debug.callback(self._record_act_maxabs, jnp.max(jnp.abs(x)))
+        return QTensor(quantize(x, fmt), fmt)
+
+    def _record_act_maxabs(self, v) -> None:
+        self._act_maxabs = max(self._act_maxabs, float(v))
+
+    def calibrate_activation_format(self, run, *, total_bits: int = 16) -> QFormat:
+        """The activation half of the max-abs calibration pass (DESIGN.md §8).
+
+        Runs ``run()`` (an *eager* forward over a calibration batch) with
+        every :meth:`quant` site recording the magnitude of the float value
+        it is about to snap, then picks the smallest Qm.n whose range covers
+        the observed maximum.  Per-tensor weight formats come from
+        :meth:`quantize_weight`; activations share this one grid so every
+        island exit lands on a single, kernel-static format.
+        """
+        from .quantization import calibrate_format
+
+        self._act_maxabs = 0.0
+        self._calibrating = True
+        try:
+            jax.block_until_ready(run())
+            # block_until_ready waits on device buffers only; the host-side
+            # recording callbacks need the effects barrier on async backends
+            jax.effects_barrier()
+        finally:
+            self._calibrating = False
+        return calibrate_format(
+            jnp.float32(self._act_maxabs), total_bits=total_bits
+        )
+
+    def dequant(self, q, fmt: Optional[QFormat] = None, dtype=jnp.float32) -> jax.Array:
+        """QTensor (or raw int16 + fmt) -> float — a counted island *entry*."""
+        self.counters["dequantize_calls"] += 1
+        if isinstance(q, QTensor):
+            return dequantize(q.raw, q.fmt, dtype)
+        return dequantize(q, fmt or self.config.qformat, dtype)
+
+    def quantize_weight(
+        self,
+        w: jax.Array,
+        policy: NumericsPolicy,
+        fmt: Optional[QFormat] = None,
+        contraction_axes: Optional[tuple] = None,
+        fused_bias: bool = False,
+    ) -> QTensor:
+        """Quantize one persistent weight (calibrated per-tensor by default;
+        ``fmt`` pins a format — e.g. biases stay on the activation grid so
+        the accumulator alignment shift can never go negative).
+
+        ``contraction_axes`` (the axes a GEMM/conv reduces over — (-2,) for
+        dense (…, k, n) weights, the kh/kw/cin axes for conv) enables the
+        *accumulator-headroom rule*: the int32 accumulator wraps (TPU-native;
+        the FPGA DSP48 cascade is 48-bit, DESIGN.md §2), and the exact
+        adversarial bound on one output is ``max|x_raw| · L1`` with L1 the
+        largest per-output column sum of |w_raw|.  The calibrated fraction is
+        capped so even ``2^15 · L1`` cannot reach 2^31 — the finest weight
+        grid that can never overflow, regardless of activation content; with
+        ``fused_bias`` one extra headroom bit covers the in-kernel shifted
+        bias add.  Counted separately from ``quantize_calls``: weight
+        quantization happens once at preparation, never inside a step.
+        """
+        import math
+
+        self.counters["weights_quantized"] += 1
+        if fmt is not None:
+            return quantize_qtensor(w, fmt)
+        if not policy.per_tensor_weights:
+            return quantize_qtensor(w, policy.fmt)
+        max_frac = None
+        if contraction_axes:
+            l1 = float(jnp.max(jnp.sum(jnp.abs(w.astype(jnp.float32)),
+                                       axis=contraction_axes)))
+            if l1 > 0:
+                # 2^15 * (L1 * 2^frac) < 2^31  =>  frac <= 16 - log2(L1),
+                # minus one bit of margin when a bias add joins the epilogue
+                budget = 15.0 if fused_bias else 16.0
+                max_frac = math.floor(budget - math.log2(l1) - 1e-9)
+        from .quantization import calibrate_format
+
+        wfmt = calibrate_format(w, max_frac=max_frac)
+        return QTensor(quantize(w, wfmt), wfmt)
+
+    def qparams_for(self, params, policy: NumericsPolicy, build):
+        """Quantize-once parameter cache, keyed by param-tree identity.
+
+        ``build()`` constructs the quantized tree on the first call for a
+        given (params, policy); later calls — a second `generate()`, every
+        scheduler restart sharing the tree — return the cached tree without
+        touching the weights (``qparam_cache_hits`` vs ``qparam_builds``).
+        The cache holds a strong reference to the source tree, so an id()
+        recycled by the allocator can never alias a different tree.
+        """
+        validate_policy(self.config, policy)
+        key = (id(params), policy)
+        ent = self._qparam_cache.get(key)
+        if ent is not None and ent[0] is params:
+            self.counters["qparam_cache_hits"] += 1
+            return ent[1]
+        self.counters["qparam_builds"] += 1
+        qp = build()
+        self._qparam_cache[key] = (params, qp)
+        return qp
+
+    def drop_qparams(self, params, policy: NumericsPolicy) -> bool:
+        """Release one cached quantized tree (e.g. a calibration probe's —
+        it was built under the provisional base policy and would otherwise
+        pin a full int16 weight copy for the process lifetime)."""
+        return self._qparam_cache.pop((id(params), policy), None) is not None
+
+    def _quant_operand(self, v) -> QTensor:
+        """QTensor passthrough; float operands are quantized inline (counted).
+
+        Persistent weights should arrive pre-quantized via a qparam tree —
+        the inline path exists so ad-hoc callers still compute correctly,
+        at the cost of a visible ``quantize_calls`` tick per call.
+        """
+        if isinstance(v, QTensor):
+            return v
+        return self.quant(v)
+
+    def _qbias_operand(self, bias, acc_frac: int):
+        """Shared bias prep for the grid-resident GEMM/conv: quantize if
+        needed and compute the accumulator alignment shift.  Returns
+        (raw_or_None, bias_shift_or_None)."""
+        if bias is None:
+            return None, None
+        bias = self._quant_operand(bias)
+        bias_shift = acc_frac - bias.fmt.frac_bits
+        if bias_shift < 0:
+            raise ValueError(
+                f"bias format {bias.fmt.name} is finer than the "
+                f"2^-{acc_frac} accumulator grid"
+            )
+        return bias.raw, bias_shift
+
+    def _qmatmul(
+        self,
+        x,
+        w,
+        *,
+        bias=None,
+        relu: bool = False,
+        out_fmt: Optional[QFormat] = None,
+        wide: bool = False,
+        plan: Optional[GemmPlan] = None,
+    ):
+        """Grid-resident GEMM: QTensor in -> QTensor out, zero float hops.
+
+        The requantize epilogue is fused into the kernel write-back (shift =
+        fa + fb - fo); ``wide=True`` reads the int32 accumulator out instead
+        and descales exactly — the final-logits island, counted as one
+        dequantize.
+        """
+        from repro.kernels import ops as kops
+
+        x = self._quant_operand(x)
+        w = self._quant_operand(w)
+        # stay on the *input's* activation grid by default: consecutive
+        # grid-resident ops then agree on the format without the caller
+        # re-stating the policy at every call site
+        out_fmt = out_fmt or x.fmt
+        lead = x.shape[:-1]
+        k = x.shape[-1]
+        n = w.shape[-1]
+        x2 = x.reshape(-1, k)
+        m = x2.shape[0]
+        acc_frac = x.fmt.frac_bits + w.fmt.frac_bits
+        b_raw, bias_shift = self._qbias_operand(bias, acc_frac)
+        self.counters["gemm_q16"] += 1
+        block = (
+            plan.block
+            if plan is not None and plan.block is not None
+            else self.block_for(m, n, k)
+        )
+        out = kops.matmul_q16(
+            x2.raw, w.raw, bias=b_raw, relu=relu, fmt=out_fmt,
+            shift=acc_frac - out_fmt.frac_bits, bias_shift=bias_shift,
+            wide=wide, block=block, interpret=self.config.interpret,
+        )
+        if wide:
+            self.counters["dequantize_calls"] += 1
+            return (out.astype(jnp.float32) * 2.0 ** -acc_frac).reshape(*lead, n)
+        return QTensor(out.reshape(*lead, n), out_fmt)
+
+    def _qconv2d(
+        self,
+        x,
+        w,
+        *,
+        stride: int = 1,
+        padding=0,
+        bias=None,
+        relu: bool = False,
+        out_fmt: Optional[QFormat] = None,
+        plan: Optional[ConvPlan] = None,
+    ) -> QTensor:
+        """Grid-resident conv (direct or im2col route per the plan)."""
+        from repro.kernels import ops as kops
+
+        x = self._quant_operand(x)
+        w = self._quant_operand(w)
+        out_fmt = out_fmt or x.fmt  # same grid-following rule as _qmatmul
+        if plan is None:
+            plan = self.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
+        if plan.route == "xla":
+            raise ValueError("grid-resident conv has no xla route (q16 only)")
+        stride, pad = plan.stride, plan.pad
+        acc_frac = x.fmt.frac_bits + w.fmt.frac_bits
+        b_raw, bias_shift = self._qbias_operand(bias, acc_frac)
+        self.counters["conv_direct" if plan.route == "direct" else "conv_im2col"] += 1
+        out = kops.conv2d_q16(
+            x.raw, w.raw, bias=b_raw, stride=stride, padding=pad, tau=plan.tau,
+            relu=relu, fmt=out_fmt, shift=acc_frac - out_fmt.frac_bits,
+            bias_shift=bias_shift, route=plan.route, block=plan.block,
+            tile_rows=plan.tile_rows, interpret=self.config.interpret,
+        )
+        return QTensor(out, out_fmt)
+
     # -- execution: GEMM -----------------------------------------------------
 
     def _xla_epilogue(self, out, bias, relu, qout, dtype):
@@ -771,6 +1040,7 @@ class Engine:
         bias: Optional[jax.Array] = None,
         relu: bool = False,
         qout: Optional[QFormat] = None,
+        wide: bool = False,
         plan: Optional[GemmPlan] = None,
     ) -> jax.Array:
         """``x @ w`` with fused epilogue; leading dims of x flatten into M.
@@ -779,7 +1049,17 @@ class Engine:
         ``config.qformat`` grid by the kernel's saturating write-back, so
         ``qout`` is implied by the backend and ignored there (same rule as
         :meth:`conv2d`).
+
+        QTensor operands take the *grid-resident* path (DESIGN.md §8): the
+        GEMM consumes int16 raws, fuses the requantize epilogue in-kernel,
+        and returns a QTensor — no float round-trip.  ``qout`` then names the
+        output grid (default: the backend qformat) and ``wide=True`` returns
+        exactly-descaled float logits from the int32 accumulator instead.
         """
+        if isinstance(x, QTensor) or isinstance(w, QTensor):
+            return self._qmatmul(
+                x, w, bias=bias, relu=relu, out_fmt=qout, wide=wide, plan=plan
+            )
         if x.ndim == 1:
             return self.matmul(x[None, :], w, bias=bias, relu=relu, qout=qout, plan=plan)[0]
         lead = x.shape[:-1]
@@ -804,7 +1084,13 @@ class Engine:
         elif backend == "q16":
             from repro.kernels import ops as kops
 
+            # legacy per-op fixed point: float operands are quantized and the
+            # result dequantized *every call* — the counters make this float
+            # round-trip visible so residency tests catch accidental use
+            # (the stay-on-grid path is the QTensor dispatch above).
             self.counters["gemm_q16"] += 1
+            self.counters["quantize_calls"] += 2 if bias is None else 3
+            self.counters["dequantize_calls"] += 1
             fmt = self.config.qformat
             block = plan.block if plan is not None and plan.block is not None else self.block_for(m, n, k)
             qres = kops.matmul_q16(
@@ -829,9 +1115,10 @@ class Engine:
         *,
         relu: bool = False,
         qout: Optional[QFormat] = None,
+        wide: bool = False,
         plan: Optional[GemmPlan] = None,
     ) -> jax.Array:
-        return self.matmul(x, w, bias=b, relu=relu, qout=qout, plan=plan)
+        return self.matmul(x, w, bias=b, relu=relu, qout=qout, wide=wide, plan=plan)
 
     # -- execution: conv -----------------------------------------------------
 
@@ -851,10 +1138,16 @@ class Engine:
 
         x: (N, H, W, Cin), w: (K, K, Cin, Cout) -> (N, Ho, Wo, Cout).
         On the q16 backend the output is inherently Q-gridded, so ``qout``
-        is implied by the backend's qformat.
+        is implied by the backend's qformat.  QTensor operands take the
+        grid-resident path and return a QTensor (DESIGN.md §8).
         """
         from repro.kernels import ops as kops
 
+        if isinstance(x, QTensor) or isinstance(w, QTensor):
+            return self._qconv2d(
+                x, w, stride=stride, padding=padding, bias=bias, relu=relu,
+                out_fmt=qout, plan=plan,
+            )
         kh, kw = w.shape[0], w.shape[1]
         if plan is None:
             plan = self.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
@@ -879,6 +1172,10 @@ class Engine:
                 tile_rows=plan.tile_rows, interpret=self.config.interpret,
             )
         assert backend == "q16", backend
+        # legacy per-op fixed point (see matmul): quantize/dequantize every
+        # call, counted so the float round-trip is visible.
+        self.counters["quantize_calls"] += 2 if bias is None else 3
+        self.counters["dequantize_calls"] += 1
         fmt = self.config.qformat
         qres = kops.conv2d_q16(
             quantize(x, fmt),

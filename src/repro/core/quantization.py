@@ -14,6 +14,15 @@ integer bits and 14 fractional bits ("2.14 format"), i.e. values in
     (TPU-native accumulator; the FPGA DSP48 cascade uses 48 bits — see
     DESIGN.md §2 for the documented difference), followed by a saturating
     right-shift write-back to Q2.14.
+  * :class:`QTensor` — a pytree of int16 raw values + their :class:`QFormat`,
+    the unit of *fixed-point residency*: grid-resident engine ops consume and
+    produce QTensors so activations stay on the Q grid between consecutive
+    layers instead of round-tripping through float per op (DESIGN.md §8).
+  * :class:`NumericsPolicy` — names the numerics a whole forward pass runs
+    under ("float" | "q16") plus the activation grid format.
+  * ``calibrate_format`` — per-tensor max-abs Qm.n selection (the "small
+    calibration pass"): the smallest integer-bit budget whose range covers
+    the observed magnitude gets the most fractional resolution.
 
 All functions are jit-safe and differentiable where meaningful.
 """
@@ -28,11 +37,20 @@ import jax.numpy as jnp
 __all__ = [
     "QFormat",
     "Q2_14",
+    "QTensor",
+    "NumericsPolicy",
+    "FLOAT_POLICY",
+    "Q16_POLICY",
+    "calibrate_format",
     "quantize",
+    "quantize_qtensor",
     "dequantize",
     "fake_quant",
     "qmatmul_ref",
+    "qtensor_matmul_ref",
+    "requantize_i32",
     "requantize_i32_to_i16",
+    "shift_saturate_i32",
 ]
 
 
@@ -90,6 +108,104 @@ class QFormat:
 Q2_14 = QFormat(int_bits=2, frac_bits=14)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QTensor:
+    """int16 raw fixed-point values + the :class:`QFormat` they live on.
+
+    A *pytree*: the raw array is the traced child, the format is static aux
+    data — so QTensors flow through ``jax.jit`` / ``lax.scan`` unchanged and
+    a stacked parameter leaf keeps one format for every scanned slice.
+    Grid-resident engine ops (``Engine.matmul``/``conv2d`` with QTensor
+    operands) consume and produce QTensors without touching float; crossing
+    back to float is an explicit, counted ``Engine.dequant``.
+    """
+
+    raw: jax.Array
+    fmt: QFormat = Q2_14
+
+    def tree_flatten(self):
+        return (self.raw,), self.fmt
+
+    @classmethod
+    def tree_unflatten(cls, fmt, children):
+        return cls(children[0], fmt)
+
+    @property
+    def shape(self):
+        return self.raw.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.raw.ndim
+
+    @property
+    def dtype(self):
+        return self.raw.dtype
+
+    def reshape(self, *shape) -> "QTensor":
+        return QTensor(self.raw.reshape(*shape), self.fmt)
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return dequantize(self.raw, self.fmt, dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """The numerics one forward pass runs under (DESIGN.md §8).
+
+    ``name``: "float" (every op in the input dtype) or "q16" (activations
+    resident on the ``fmt`` grid between compute-unit ops; float only at the
+    designated islands — softmax, norms, RoPE, non-ReLU activations — and the
+    final logits read-out).  ``per_tensor_weights`` selects max-abs calibrated
+    Qm.n per weight tensor instead of forcing every weight onto ``fmt``.
+    Frozen + hashable: compiled-step memos and qparam caches key on it.
+    """
+
+    name: str = "float"  # "float" | "q16"
+    fmt: QFormat = Q2_14
+    per_tensor_weights: bool = True
+
+    def __post_init__(self):
+        if self.name not in ("float", "q16"):
+            raise ValueError(f"unknown numerics policy {self.name!r}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.name == "q16"
+
+
+FLOAT_POLICY = NumericsPolicy("float")
+Q16_POLICY = NumericsPolicy("q16")
+
+
+def calibrate_format(x, *, total_bits: int = 16,
+                     max_frac: int | None = None) -> QFormat:
+    """Max-abs per-tensor Qm.n selection (host-side, once per tensor).
+
+    Picks the smallest integer-bit count whose representable range covers
+    ``max|x|`` — every remaining bit goes to fractional resolution,
+    optionally capped at ``max_frac`` (accumulator-headroom rule, see
+    ``Engine.quantize_weight``).  Runs a host sync (``float(...)``), so call
+    it from parameter-preparation code, never inside a jitted step.
+    """
+    maxabs = float(jnp.max(jnp.abs(jnp.asarray(x, jnp.float32)))) if jnp.size(x) else 0.0
+    for int_bits in range(1, total_bits + 1):
+        frac = total_bits - int_bits
+        if max_frac is not None:
+            frac = max(0, min(frac, max_frac))
+        fmt = QFormat(int_bits, frac)
+        if maxabs <= fmt.max_val:
+            return fmt
+    return QFormat(total_bits, 0)  # saturating fallback for huge magnitudes
+
+
+def quantize_qtensor(x: jax.Array, fmt: QFormat | None = None) -> QTensor:
+    """Quantize to a :class:`QTensor`; ``fmt=None`` calibrates per-tensor."""
+    fmt = fmt or calibrate_format(x)
+    return QTensor(quantize(x, fmt), fmt)
+
+
 def quantize(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
     """Real -> int16 raw fixed point, round-to-nearest-even, saturating."""
     raw = jnp.round(x.astype(jnp.float32) * fmt.scale)
@@ -127,17 +243,43 @@ def fake_quant_fmt(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
     return fake_quant(x, fmt.scale, fmt.min_val, fmt.max_val)
 
 
-def requantize_i32_to_i16(acc: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+def shift_saturate_i32(acc: jax.Array, shift: int, raw_min: int, raw_max: int) -> jax.Array:
+    """The one write-back ladder: round-half-up arithmetic shift (exact
+    up-scale for ``shift <= 0``) + saturation into an int16 raw range.
+
+    Pure jnp on int32 values with static ``shift``, so the Pallas q16
+    kernels call this exact function inside their epilogues — the
+    bit-identical contract between :func:`requantize_i32` and the kernels is
+    structural, not copy-pasted.
+    """
+    if shift > 0:
+        shifted = (acc + jnp.int32(1 << (shift - 1))) >> shift
+    elif shift == 0:
+        shifted = acc
+    else:
+        shifted = acc << (-shift)
+    return jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+
+
+def requantize_i32(acc: jax.Array, shift: int, fmt: QFormat = Q2_14) -> jax.Array:
     """Saturating write-back of an int32 accumulator to Qm.n int16.
 
-    The accumulator holds values at scale 2^(2*frac_bits) (product of two
-    Qm.n numbers); shift right by frac_bits with round-to-nearest, then
-    saturate into the int16 raw range.  This models the FPGA accumulator
-    write-back stage.
+    ``shift`` is the scale gap between the accumulator and the output grid:
+    for an x(Qa.fa) x w(Qb.fb) product written back to Qm.n it is
+    ``fa + fb - n``.  Positive shifts round-to-nearest before the arithmetic
+    right shift; ``shift <= 0`` up-scales (exact).  Saturates into the int16
+    raw range — this models the FPGA accumulator write-back stage, and the
+    Pallas kernels' fused epilogue runs the same :func:`shift_saturate_i32`.
     """
-    rounding = jnp.int32(1 << (fmt.frac_bits - 1))
-    shifted = (acc + rounding) >> fmt.frac_bits
-    return jnp.clip(shifted, fmt.raw_min, fmt.raw_max).astype(jnp.int16)
+    return shift_saturate_i32(acc, shift, fmt.raw_min, fmt.raw_max)
+
+
+def requantize_i32_to_i16(acc: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
+    """Same-format write-back: the accumulator holds values at scale
+    2^(2*frac_bits) (product of two Qm.n numbers), so the shift is one
+    frac_bits.  Kept as the single-format entry point the q16 kernels and
+    ``qmatmul_ref`` share."""
+    return requantize_i32(acc, fmt.frac_bits, fmt)
 
 
 @partial(jax.jit, static_argnames=("fmt",))
@@ -151,6 +293,34 @@ def qmatmul_ref(xq: jax.Array, wq: jax.Array, fmt: QFormat = Q2_14) -> jax.Array
         xq.astype(jnp.int32), wq.astype(jnp.int32), preferred_element_type=jnp.int32
     )
     return requantize_i32_to_i16(acc, fmt)
+
+
+def qtensor_matmul_ref(
+    x: QTensor, w: QTensor, out_fmt: QFormat = Q2_14,
+    bias: QTensor | None = None, relu: bool = False,
+) -> QTensor:
+    """Mixed-format oracle for the grid-resident GEMM (DESIGN.md §8).
+
+    x: (m, k) Qa.fa, w: (k, n) Qb.fb -> (m, n) on ``out_fmt``; the int32
+    accumulator sits at scale 2^(fa+fb), bias raw (Qc.fc) is aligned onto
+    the accumulator by ``fa + fb - fc`` before the epilogue.  This is what
+    ``matmul_q16_pallas`` computes when given explicit shifts.
+    """
+    acc = jnp.dot(
+        x.raw.astype(jnp.int32), w.raw.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    if bias is not None:
+        bshift = x.fmt.frac_bits + w.fmt.frac_bits - bias.fmt.frac_bits
+        if bshift < 0:
+            raise ValueError(
+                f"bias format {bias.fmt.name} finer than the accumulator grid"
+            )
+        acc = acc + (bias.raw.astype(jnp.int32) << bshift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    shift = x.fmt.frac_bits + w.fmt.frac_bits - out_fmt.frac_bits
+    return QTensor(requantize_i32(acc, shift, out_fmt), out_fmt)
 
 
 def qmatmul_real(x: jax.Array, w: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:

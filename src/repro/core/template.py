@@ -75,6 +75,16 @@ class Template:
     def block_for(self, m: int, n: int, k: int) -> MatmulBlock:
         return self.engine.block_for(m, n, k)
 
+    # -- fixed-point residency (QTensor boundary ops, DESIGN.md §8) ----------
+
+    def quant(self, x, fmt: Optional[QFormat] = None):
+        """Float -> QTensor on the activation grid (counted island exit)."""
+        return self.engine.quant(x, fmt)
+
+    def dequant(self, q, fmt: Optional[QFormat] = None, dtype=jnp.float32):
+        """QTensor / raw int16 -> float (counted island entry)."""
+        return self.engine.dequant(q, fmt, dtype)
+
     # -- the unified compute unit ---------------------------------------------
 
     def matmul(self, x: jax.Array, w: jax.Array, **kw) -> jax.Array:

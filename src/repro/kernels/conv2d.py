@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantization import QFormat, Q2_14
+from repro.core.quantization import QFormat, Q2_14, shift_saturate_i32
 
 __all__ = ["conv2d_pallas", "conv2d_q16_pallas"]
 
@@ -193,10 +193,13 @@ def conv2d_pallas(
 
 
 def _conv_q16_kernel(
-    *refs, kh, kw, th, wo, stride, relu, frac_bits, raw_min, raw_max, halo, fused_bias
+    *refs, kh, kw, th, wo, stride, relu, shift, bias_shift, raw_min, raw_max,
+    halo, fused_bias
 ):
     # Same dataflow as _conv_kernel, fixed point: int16 taps accumulated in
-    # int32 (DESIGN.md §2), saturating round-shift write-back to Qm.n.
+    # int32 (DESIGN.md §2), saturating round-shift write-back to the output
+    # Q format.  ``shift`` = fa+fb-fo for x(Qa.fa) x w(Qb.fb) -> Qm.fo;
+    # ``bias_shift`` aligns the raw bias onto the 2^(fa+fb) accumulator.
     x1_ref, x2_ref, w_ref, b_ref, o_ref, acc_ref = _split_refs(refs, halo, fused_bias)
     acc_ref[...] = jnp.zeros_like(acc_ref)
     cin = x1_ref.shape[3]
@@ -210,20 +213,19 @@ def _conv_q16_kernel(
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.int32)
     acc = acc_ref[...]
     if b_ref is not None:
-        # bias is Qm.n raw at scale 2^n; the accumulator sits at 2^(2n), so
-        # the shifted add is bit-identical to adding raw bias post-shift.
-        acc = acc + (b_ref[...].astype(jnp.int32) << frac_bits)
+        acc = acc + (b_ref[...].astype(jnp.int32) << bias_shift)
     if relu:
         acc = jnp.maximum(acc, 0)
-    rounding = jnp.int32(1 << (frac_bits - 1))
-    shifted = (acc + rounding) >> frac_bits
-    out = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+    out = shift_saturate_i32(acc, shift, raw_min, raw_max)
     o_ref[...] = out.reshape(1, th, wo, -1)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "tau", "relu", "fmt", "tile_rows", "interpret"),
+    static_argnames=(
+        "stride", "tau", "relu", "fmt", "shift", "bias_shift", "tile_rows",
+        "interpret",
+    ),
 )
 def conv2d_q16_pallas(
     xq: jax.Array,
@@ -234,6 +236,8 @@ def conv2d_q16_pallas(
     tau: int = 128,
     relu: bool = False,
     fmt: QFormat = Q2_14,
+    shift: int | None = None,
+    bias_shift: int | None = None,
     tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
@@ -241,7 +245,9 @@ def conv2d_q16_pallas(
 
     ``tile_rows`` spatially tiles the output rows exactly as in
     :func:`conv2d_pallas`; zero-padded halo rows contribute zero products, so
-    tiled and untiled accumulations are bit-identical.
+    tiled and untiled accumulations are bit-identical.  ``shift`` /
+    ``bias_shift`` override the write-back scale gaps for mixed-format
+    operands (default: same-format Qm.n semantics).
     """
     assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
     n, h, wdt, cin = xq.shape
@@ -271,7 +277,8 @@ def conv2d_q16_pallas(
         wo=wo,
         stride=stride,
         relu=relu,
-        frac_bits=fmt.frac_bits,
+        shift=fmt.frac_bits if shift is None else shift,
+        bias_shift=fmt.frac_bits if bias_shift is None else bias_shift,
         raw_min=fmt.raw_min,
         raw_max=fmt.raw_max,
         halo=halo,

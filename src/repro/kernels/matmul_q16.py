@@ -14,13 +14,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.quantization import QFormat, Q2_14
+from repro.core.quantization import QFormat, Q2_14, shift_saturate_i32
 from repro.core.tiling import MatmulBlock
 
 __all__ = ["matmul_q16_pallas"]
 
 
-def _qmm_kernel(*refs, frac_bits, raw_min, raw_max, relu):
+def _qmm_kernel(*refs, shift, bias_shift, raw_min, raw_max, relu, wide):
     # refs: (x, w[, bias], out, acc) — bias operand only present when fused.
     if len(refs) == 5:
         x_ref, w_ref, b_ref, o_ref, acc_ref = refs
@@ -40,20 +40,27 @@ def _qmm_kernel(*refs, frac_bits, raw_min, raw_max, relu):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _write_back():
-        # bias is Qm.n raw at scale 2^n; the accumulator sits at 2^(2n), so
-        # the shifted add is bit-identical to adding raw bias post-shift
-        # (fused epilogue, DESIGN.md §3).
+        # bias raw (Qc.fc) aligns onto the accumulator scale 2^(fa+fb) by
+        # bias_shift = fa+fb-fc, so the shifted add is bit-identical to
+        # adding raw bias post-shift (fused epilogue, DESIGN.md §3/§8).
         acc = acc_ref[...]
         if b_ref is not None:
-            acc = acc + (b_ref[...].astype(jnp.int32) << frac_bits)
+            acc = acc + (b_ref[...].astype(jnp.int32) << bias_shift)
         if relu:
             acc = jnp.maximum(acc, 0)
-        rounding = jnp.int32(1 << (frac_bits - 1))
-        shifted = (acc + rounding) >> frac_bits
-        o_ref[...] = jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+        if wide:
+            # accumulator read-out (final logits boundary): no requantize —
+            # the caller descales by 2^-(fa+fb) exactly, so the head never
+            # saturates on logits outside the int16 grid's range.
+            o_ref[...] = acc
+            return
+        o_ref[...] = shift_saturate_i32(acc, shift, raw_min, raw_max)
 
 
-@functools.partial(jax.jit, static_argnames=("fmt", "block", "relu", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("fmt", "block", "relu", "shift", "bias_shift", "wide", "interpret"),
+)
 def matmul_q16_pallas(
     xq: jax.Array,
     wq: jax.Array,
@@ -62,12 +69,19 @@ def matmul_q16_pallas(
     fmt: QFormat = Q2_14,
     block: MatmulBlock = MatmulBlock(256, 256, 256),
     relu: bool = False,
+    shift: int | None = None,
+    bias_shift: int | None = None,
+    wide: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """xq: (m, k) int16 raw @ wq: (k, n) int16 raw -> (m, n) int16 raw.
 
     ``bias``: (n,) int16 raw, fused into the write-back; ``relu``: fused on
-    the int32 accumulator before the saturating shift.
+    the int32 accumulator before the saturating shift.  ``shift`` /
+    ``bias_shift`` override the write-back scale gaps for mixed-format
+    operands (default: same-format semantics, one ``fmt.frac_bits`` each);
+    ``wide=True`` returns the raw int32 accumulator (no requantize) for the
+    final-layer read-out.
     """
     assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
     m, k = xq.shape
@@ -91,17 +105,19 @@ def matmul_q16_pallas(
 
     kernel = functools.partial(
         _qmm_kernel,
-        frac_bits=fmt.frac_bits,
+        shift=fmt.frac_bits if shift is None else shift,
+        bias_shift=fmt.frac_bits if bias_shift is None else bias_shift,
         raw_min=fmt.raw_min,
         raw_max=fmt.raw_max,
         relu=relu,
+        wide=wide,
     )
     out = pl.pallas_call(
         kernel,
         grid=(mp // bm, np_ // bn, kp // bk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int16),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32 if wide else jnp.int16),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(*operands)

@@ -107,6 +107,9 @@ def matmul_q16(
     bias: jax.Array | None = None,
     relu: bool = False,
     fmt: QFormat = Q2_14,
+    shift: int | None = None,
+    bias_shift: int | None = None,
+    wide: bool = False,
     block: MatmulBlock | None = None,
     interpret: bool = False,
 ) -> jax.Array:
@@ -114,7 +117,8 @@ def matmul_q16(
     n = wq.shape[1]
     block = clamp_block(m, n, k, block or MatmulBlock(256, 256, 256))
     return matmul_q16_pallas(
-        xq, wq, bias, fmt=fmt, block=block, relu=relu, interpret=interpret
+        xq, wq, bias, fmt=fmt, block=block, relu=relu, shift=shift,
+        bias_shift=bias_shift, wide=wide, interpret=interpret
     )
 
 
@@ -177,18 +181,22 @@ def conv2d_q16(
     tau: int = 128,
     relu: bool = False,
     fmt: QFormat = Q2_14,
+    shift: int | None = None,
+    bias_shift: int | None = None,
     route: str = "direct",
     block: MatmulBlock | None = None,
     tile_rows: int = 0,
     interpret: bool = False,
 ) -> jax.Array:
-    """NHWC conv, fixed-point path.  All tensors int16 raw Qm.n."""
+    """NHWC conv, fixed-point path.  All tensors int16 raw Qm.n; ``shift`` /
+    ``bias_shift`` carry mixed-format write-back gaps (see matmul_q16)."""
     if padding:
         xq = jnp.pad(xq, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     if route == "direct":
         return conv2d_q16_pallas(
             xq, wq, bias, stride=stride, tau=tau, relu=relu, fmt=fmt,
-            tile_rows=tile_rows, interpret=interpret,
+            shift=shift, bias_shift=bias_shift, tile_rows=tile_rows,
+            interpret=interpret,
         )
     assert route == "im2col", route
     n = xq.shape[0]
@@ -196,7 +204,7 @@ def conv2d_q16(
     cols, ho, wo = im2col(xq, kh, kw, stride)
     out = matmul_q16(
         cols, conv_gemm_weights(wq), bias=bias, relu=relu, fmt=fmt,
-        block=block, interpret=interpret,
+        shift=shift, bias_shift=bias_shift, block=block, interpret=interpret,
     )
     return out.reshape(n, ho, wo, cout)
 

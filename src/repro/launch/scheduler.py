@@ -42,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import bucket_for, register_plan_store
+from repro.core.engine import bucket_for, register_plan_store, validate_policy
+from repro.core.quantization import NumericsPolicy
 from repro.core.template import Template, default_template
 from repro.models import transformer as T
 
@@ -108,30 +109,36 @@ register_plan_store(_STEP_FNS)
 register_plan_store(TRACE_COUNTS)
 
 
-def compiled_steps(tpl: Template, cfg, cache_len: int):
+def compiled_steps(tpl: Template, cfg, cache_len: int,
+                   policy: Optional[NumericsPolicy] = None):
     """The memoized (prefill_fn, decode_fn) pair for one serving setup.
 
     prefill_fn(params, tokens, ctx, last_pos) -> (logits (B,V), cache)
     decode_fn(params, token, t, cache)        -> (logits (B,V), cache')
 
-    Keyed by (template, config, cache_len): repeated `generate()` calls and
-    every scheduler step reuse one pair of jitted callables, so jax's own
-    compilation cache applies — distinct *shapes* still trace once each
-    (that is the bucket ladder's job to bound), but a repeated shape never
-    retraces.  The closure bodies bump :data:`TRACE_COUNTS` — they only run
-    while jax is tracing.
+    Keyed by (template, config, cache_len, numerics policy): repeated
+    `generate()` calls and every scheduler step reuse one pair of jitted
+    callables, so jax's own compilation cache applies — distinct *shapes*
+    still trace once each (that is the bucket ladder's job to bound), but a
+    repeated shape never retraces.  A quantized policy closure expects the
+    matching :func:`repro.models.transformer.quantize_params` tree as
+    ``params``.  The closure bodies bump :data:`TRACE_COUNTS` — they only
+    run while jax is tracing.
     """
-    key = (tpl, cfg, int(cache_len))
+    policy = validate_policy(tpl.config, policy)
+    key = (tpl, cfg, int(cache_len), policy)
     fns = _STEP_FNS.pop(key, None)
     if fns is None:
         def _prefill(params, tokens, ctx, last_pos):
             TRACE_COUNTS["prefill", cfg.name, int(cache_len)] += 1
             return T.prefill(tpl, cfg, params, tokens, ctx=ctx,
-                             cache_len=cache_len, last_pos=last_pos)
+                             cache_len=cache_len, last_pos=last_pos,
+                             policy=policy)
 
         def _decode(params, token, t, cache):
             TRACE_COUNTS["decode", cfg.name, int(cache_len)] += 1
-            return T.decode_step(tpl, cfg, params, token, t, cache)
+            return T.decode_step(tpl, cfg, params, token, t, cache,
+                                 policy=policy)
 
         # the input cache dies the moment a decode step returns — donate it
         # so XLA aliases the (slots, Hkv, C, D) ring buffers in place instead
@@ -216,7 +223,8 @@ class ServeScheduler:
     """
 
     def __init__(self, cfg, params, *, sched: Optional[SchedulerConfig] = None,
-                 tpl: Optional[Template] = None, clock=None) -> None:
+                 tpl: Optional[Template] = None, clock=None,
+                 policy: Optional[NumericsPolicy] = None) -> None:
         pattern = T.plan_pattern(cfg)
         # "local" with a real window is also unsound: its ring cache is only
         # window-sized, so a bucket-padded prefill longer than the window
@@ -235,12 +243,22 @@ class ServeScheduler:
         self.tpl = tpl or default_template()
         self.sched = sched or SchedulerConfig()
         self.clock = clock or SystemClock()
+        # backend/policy combos are rejected up front with a clear error
+        # (q16 policy on a float backend, quantized non-dense families, ...)
+        # instead of silently serving the wrong numerics
+        self.policy = validate_policy(self.tpl.config, policy)
+        self.exec_params = (
+            T.quantize_params(self.tpl, cfg, params, self.policy)
+            if self.policy.quantized else params
+        )
+        self.cache_dtype = jnp.int16 if self.policy.quantized else None
         self.cache_len = self.sched.resolved_cache_len()
         if max(self.sched.ladder) > self.cache_len:
             raise ValueError("cache_len smaller than the largest bucket")
         self.engine = self.tpl.engine
         self.registry = self.engine.plan_cache
-        self._prefill, self._decode = compiled_steps(self.tpl, cfg, self.cache_len)
+        self._prefill, self._decode = compiled_steps(self.tpl, cfg,
+                                                     self.cache_len, self.policy)
 
         # compiled slot insertion (one trace per slot index — cache shapes
         # are bucket-independent); the old batched cache is dead afterwards
@@ -277,15 +295,15 @@ class ServeScheduler:
             toks = jnp.zeros((1, b), jnp.int32)
             with self.registry.scope(into=self.bucket_stats[b]):
                 jax.block_until_ready(
-                    self._prefill(self.params, toks, None, jnp.int32(b - 1))[0]
+                    self._prefill(self.exec_params, toks, None, jnp.int32(b - 1))[0]
                 )
         cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                             per_slot=True)
+                             dtype=self.cache_dtype, per_slot=True)
         tok = jnp.zeros((self.sched.slots, 1), jnp.int32)
         tvec = jnp.zeros((self.sched.slots,), jnp.int32)
         with self.registry.scope() as decode_delta:
             jax.block_until_ready(
-                self._decode(self.params, tok, tvec, cache)[0]
+                self._decode(self.exec_params, tok, tvec, cache)[0]
             )
         self.counters["warmup_decode_misses"] += decode_delta["misses"]
         return {b: dict(s) for b, s in self.bucket_stats.items()}
@@ -349,7 +367,7 @@ class ServeScheduler:
         )
         with self.registry.scope(into=bstats):
             logits, row_cache = self._prefill(
-                self.params, jnp.asarray(tokens), None, jnp.int32(s_total - 1)
+                self.exec_params, jnp.asarray(tokens), None, jnp.int32(s_total - 1)
             )
         tok = int(jnp.argmax(logits[0]))
         req.generated.append(tok)
@@ -362,7 +380,7 @@ class ServeScheduler:
             return
         if self.cache is None:
             self.cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                                      per_slot=True)
+                                      dtype=self.cache_dtype, per_slot=True)
         self.cache = self._insert(self.cache, row_cache, jnp.int32(s_total), slot)
         req.t_next = s_total
         self.active[slot] = req
@@ -421,7 +439,7 @@ class ServeScheduler:
                 tok[slot, 0] = req.generated[-1]
                 tvec[slot] = req.t_next
             logits, self.cache = self._decode(
-                self.params, jnp.asarray(tok), jnp.asarray(tvec), self.cache
+                self.exec_params, jnp.asarray(tok), jnp.asarray(tvec), self.cache
             )
             next_tok = np.asarray(jnp.argmax(logits, axis=-1))
             self.counters["decode_steps"] += 1

@@ -32,19 +32,25 @@ from repro.models import transformer as T
 
 
 def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
-             greedy=True, tpl=None):
+             greedy=True, tpl=None, policy=None):
     """Prefill + autoregressive decode.  tokens: (B, S) prompts.
 
     The jitted prefill/decode closures are hoisted into the
-    `scheduler.compiled_steps` memo (keyed by template, config, cache_len):
-    repeated calls — and the continuous-batching scheduler, which shares the
-    memo — reuse one pair of compiled callables instead of retracing per
-    call.
+    `scheduler.compiled_steps` memo (keyed by template, config, cache_len,
+    numerics policy): repeated calls — and the continuous-batching
+    scheduler, which shares the memo — reuse one pair of compiled callables
+    instead of retracing per call.
+
+    ``policy``: a quantized :class:`NumericsPolicy` runs the whole decode
+    loop grid-resident (weights quantized once via the engine's qparam
+    cache, int16 KV cache, float only at the designated islands).
     """
     tpl = tpl or default_template()
+    if policy is not None and policy.quantized:
+        params = T.quantize_params(tpl, cfg, params, policy)
     b, s = tokens.shape
     cache_len = cache_len or (s + gen)
-    prefill, decode = compiled_steps(tpl, cfg, cache_len)
+    prefill, decode = compiled_steps(tpl, cfg, cache_len, policy)
 
     logits, cache = prefill(params, tokens, ctx, jnp.int32(s - 1))
     out = []
@@ -58,12 +64,16 @@ def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
 
 
 def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
-                  gen: int, seed: int, clock=None) -> ServeScheduler:
+                  gen: int, seed: int, clock=None, policy=None) -> ServeScheduler:
     """Serve a mixed-length synthetic request set through the
-    continuous-batching scheduler (the production path of DESIGN.md §7)."""
+    continuous-batching scheduler (the production path of DESIGN.md §7).
+
+    ``policy`` threads the numerics policy into the scheduler's compiled
+    steps — `--backend q16 --scheduler` serves a fully fixed-point decode
+    loop instead of silently ignoring the backend."""
     ladder = tuple(sorted({max(4, prompt_len // 2), prompt_len, 2 * prompt_len}))
     sched = ServeScheduler(
-        cfg, params, tpl=tpl, clock=clock or SystemClock(),
+        cfg, params, tpl=tpl, clock=clock or SystemClock(), policy=policy,
         # this path serves exactly `requests` requests, all arriving at t=0 —
         # the queue must hold the whole burst, rejection is not policy here
         sched=SchedulerConfig(ladder=ladder, slots=4, max_new_limit=max(gen, 1),
@@ -110,12 +120,29 @@ def main(argv=None):
     # whole serve session: prefill and every decode step reuse the same plan,
     # so DSE block selection runs at most once per distinct GEMM shape.
     tpl = default_template(args.backend)
+    # --backend q16 serves grid-resident fixed point (DESIGN.md §8): weights
+    # quantized once, int16 KV cache, activation grid picked by a small
+    # max-abs calibration pass over one synthetic batch.
+    policy = None
+    if args.backend == "q16":
+        cal = synthetic_batch(args.seed + 1, 7, 2, max(args.prompt_len, 8),
+                              cfg.vocab)
+        try:
+            policy = T.calibrate_policy(tpl, cfg, params, cal)
+        except ValueError as err:
+            if args.scheduler:  # the batched path must not silently degrade
+                raise SystemExit(f"--backend q16 --scheduler: {err}") from err
+            print(f"[serve] WARNING: {err}; falling back to per-op q16 "
+                  f"(float round-trips between layers)")
+        else:
+            print(f"[serve] numerics: q16 grid-resident, activations "
+                  f"{policy.fmt.name} (calibrated), weights per-tensor")
     t0 = time.time()
     if args.scheduler:
         try:
             sched = run_scheduler(cfg, params, tpl, requests=args.prompts,
                                   prompt_len=args.prompt_len, gen=args.gen,
-                                  seed=args.seed)
+                                  seed=args.seed, policy=policy)
         except ValueError as err:  # admission policy lives in ServeScheduler
             raise SystemExit(f"--scheduler: {err}") from err
         dt = time.time() - t0
@@ -137,7 +164,8 @@ def main(argv=None):
             ctx = jax.random.normal(
                 jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
             ) * 0.1
-        gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl)
+        gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl,
+                       policy=policy)
         dt = time.time() - t0
         print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
               f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "

@@ -27,6 +27,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import NumericsPolicy, QTensor
 from repro.core.template import Template
 from repro.parallel.sharding import constrain
 
@@ -36,6 +37,7 @@ __all__ = [
     "init_attention",
     "attention_axes",
     "attention",
+    "attention_islands",
     "decode_attention",
     "init_layer_cache",
     "CHUNKED_THRESHOLD",
@@ -292,6 +294,7 @@ def attention(
     head_dim: Optional[int] = None,
     use_rope: Optional[bool] = None,
     cache_len: int = 0,
+    policy: Optional[NumericsPolicy] = None,
 ):
     """Full-sequence attention.  x: (B, S, d).
 
@@ -300,20 +303,39 @@ def attention(
     - ``cache_len > 0`` (prefill): additionally returns the filled ring-buffer
       cache {"k","v","pos"} for decode continuation.
     Returns (out, cache_or_None).
+
+    Under a quantized ``policy`` (QTensor weights, DESIGN.md §8) the four
+    projections run grid-resident off one quantized input; q/k/v cross to
+    float only for the designated RoPE/softmax island, the returned cache
+    holds int16 raws (v straight off the GEMM grid, k requantized after
+    RoPE), and the wo output dequantizes once into the residual stream.
     """
     h = n_heads or cfg.eff_heads
     kvh = n_kv or cfg.n_kv_heads
     hd = head_dim or cfg.head_dim
     rope = cfg.use_rope if use_rope is None else use_rope
+    q16 = (
+        policy is not None and policy.quantized
+        and isinstance(p["wq"]["w"], QTensor)
+    )
+    eng = tpl.engine
 
-    q = _split_heads(dense(tpl, p["wq"], x), h)
+    if q16:
+        xin = eng.quant(x, policy.fmt)
+        src_in = xin if kv_source is None else eng.quant(kv_source, policy.fmt)
+        q = _split_heads(eng.dequant(dense(tpl, p["wq"], xin)), h)
+        kq = dense(tpl, p["wk"], src_in)  # QTensor, stays on the grid
+        vq = dense(tpl, p["wv"], src_in)
+        k = _split_heads(eng.dequant(kq), kvh)
+        v = _split_heads(eng.dequant(vq), kvh)
+    else:
+        q = _split_heads(dense(tpl, p["wq"], x), h)
+        src = x if kv_source is None else kv_source
+        k = _split_heads(dense(tpl, p["wk"], src), kvh)
+        v = _split_heads(dense(tpl, p["wv"], src), kvh)
     if rope:
         q = apply_rope(q, positions, cfg.rope_theta)
     q = constrain(q, "batch", None, "act_heads", None)
-
-    src = x if kv_source is None else kv_source
-    k = _split_heads(dense(tpl, p["wk"], src), kvh)
-    v = _split_heads(dense(tpl, p["wv"], src), kvh)
     if rope and kv_source is None:
         k = apply_rope(k, positions, cfg.rope_theta)
     k = constrain(k, "batch", None, "kv_heads", None)
@@ -336,14 +358,29 @@ def attention(
         out = _sdpa_dense(q, k, v, mask)
 
     out = constrain(out, "batch", None, "act_heads", None)
-    out = dense(tpl, p["wo"], out.reshape(x.shape[0], x.shape[1], h * hd))
+    out = out.reshape(x.shape[0], x.shape[1], h * hd)
+    if q16:
+        out = eng.dequant(dense(tpl, p["wo"], eng.quant(out, policy.fmt)))
+    else:
+        out = dense(tpl, p["wo"], out)
 
     cache = None
     if cache_len:
         # self-attention caches query positions; cross-attention caches the
         # (static) context positions 0..T-1
         fill_pos = positions if kv_source is None else jnp.arange(st)
-        cache = _fill_cache(k, v, fill_pos, cache_len if kv_source is None else st)
+        if q16:
+            # int16-resident cache: v comes straight off the GEMM grid (it
+            # was never roped); k re-enters the grid after the RoPE island
+            k_c = (
+                eng.quant(k, policy.fmt).raw
+                if rope and kv_source is None
+                else kq.reshape(*k.shape).raw
+            )
+            v_c = vq.reshape(*v.shape).raw
+        else:
+            k_c, v_c = k, v
+        cache = _fill_cache(k_c, v_c, fill_pos, cache_len if kv_source is None else st)
     return out, cache
 
 
@@ -375,6 +412,23 @@ def _fill_cache(k: jax.Array, v: jax.Array, positions: jax.Array, cache_len: int
     return {"k": kt, "v": vt, "pos": pos}
 
 
+def attention_islands(cfg, *, mode: str, cached: bool = False) -> dict:
+    """Designated float islands of one quantized attention sublayer, as
+    (quantize, dequantize) call counts — the law the residency test asserts
+    (DESIGN.md §8).
+
+    decode: quantize {x, attn-out, +k after RoPE}; dequantize {q, +k for
+    RoPE, cache k, cache v, wo-out}.  prefill/forward: quantize {x,
+    attn-out, +k for the cache when RoPE rotated it}; dequantize {q, k, v,
+    wo-out}.  v never costs an island: it is written to (and read from) the
+    int16 cache straight off the GEMM grid.
+    """
+    rope = cfg.use_rope
+    if mode == "decode":
+        return {"quantize": 2 + int(rope), "dequantize": 5 if rope else 4}
+    return {"quantize": 2 + int(rope and cached), "dequantize": 4}
+
+
 # ---------------------------------------------------------------------------
 # decode (one token, ring cache)
 # ---------------------------------------------------------------------------
@@ -394,6 +448,7 @@ def decode_attention(
     n_kv: Optional[int] = None,
     head_dim: Optional[int] = None,
     use_rope: Optional[bool] = None,
+    policy: Optional[NumericsPolicy] = None,
 ):
     """One decode step.  x: (B, 1, d); t: scalar int32 position, or — with a
     slot-indexed cache (pos: (B, C)) — a per-row position vector t: (B,).
@@ -401,11 +456,21 @@ def decode_attention(
     Self-attention (cross=False) appends the new kv at slot t % C and masks
     by stored positions; cross-attention reads a static cache (no update).
     Returns (out, new_cache).
+
+    Under a quantized ``policy`` the projections are grid-resident and the
+    ring cache holds int16 raws: the new v row is written straight off the
+    GEMM grid (zero float hops), k re-enters the grid after the RoPE island,
+    and the cached keys/values dequantize once into the softmax island.
     """
     h = n_heads or cfg.eff_heads
     kvh = n_kv or cfg.n_kv_heads
     hd = head_dim or cfg.head_dim
     rope = (cfg.use_rope if use_rope is None else use_rope) and not cross
+    q16 = (
+        policy is not None and policy.quantized
+        and isinstance(p["wq"]["w"], QTensor)
+    )
+    eng = tpl.engine
 
     b = x.shape[0]
     per_slot = (not cross) and cache["pos"].ndim == 2
@@ -416,7 +481,9 @@ def decode_attention(
     else:
         tpos = tpos.reshape(())
         q_positions = tpos[None]  # (1,)
-    q = _split_heads(dense(tpl, p["wq"], x), h)
+    xin = eng.quant(x, policy.fmt) if q16 else x
+    q = _split_heads(eng.dequant(dense(tpl, p["wq"], xin)) if q16
+                     else dense(tpl, p["wq"], xin), h)
     if rope:
         q = apply_rope(q, q_positions, cfg.rope_theta)
 
@@ -427,10 +494,23 @@ def decode_attention(
     else:
         c = cache["k"].shape[2]
         slot = (tpos % c).astype(jnp.int32)
-        k_new = _split_heads(dense(tpl, p["wk"], x), kvh)
-        v_new = _split_heads(dense(tpl, p["wv"], x), kvh)
-        if rope:
-            k_new = apply_rope(k_new, q_positions, cfg.rope_theta)
+        kq = dense(tpl, p["wk"], xin)
+        vq = dense(tpl, p["wv"], xin)
+        if q16:
+            # v never leaves the grid; k crosses only for the RoPE island
+            v_new = vq.reshape(b, 1, kvh, hd).raw
+            if rope:
+                k_new = apply_rope(
+                    _split_heads(eng.dequant(kq), kvh), q_positions, cfg.rope_theta
+                )
+                k_new = eng.quant(k_new, policy.fmt).raw
+            else:
+                k_new = kq.reshape(b, 1, kvh, hd).raw
+        else:
+            k_new = _split_heads(kq, kvh)
+            v_new = _split_heads(vq, kvh)
+            if rope:
+                k_new = apply_rope(k_new, q_positions, cfg.rope_theta)
         if per_slot:
             # each row writes its own ring slot: (b, :, slot[b]) scatter
             rows = jnp.arange(b)
@@ -460,7 +540,16 @@ def decode_attention(
 
     if valid.ndim == 1:
         valid = valid[None]
+    if q16:
+        # the int16 ring cache crosses into the softmax island here — the
+        # only read of (B, Hkv, C, D) per step moves 2-byte, not 4-byte, rows
+        k = eng.dequant(k, policy.fmt)
+        v = eng.dequant(v, policy.fmt)
     mask = jnp.broadcast_to(valid[:, None, None, :], (b, 1, 1, k.shape[2]))
     out = _sdpa_dense(q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), mask)
-    out = dense(tpl, p["wo"], out.reshape(b, 1, h * hd))
+    out = out.reshape(b, 1, h * hd)
+    if q16:
+        out = eng.dequant(dense(tpl, p["wo"], eng.quant(out, policy.fmt)))
+    else:
+        out = dense(tpl, p["wo"], out)
     return out, new_cache

@@ -21,8 +21,14 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ConvPlan, GemmPlan, register_plan_store
-from repro.core.quantization import Q2_14, QFormat, fake_quant_fmt
+from repro.core.engine import ConvPlan, GemmPlan, register_plan_store, validate_policy
+from repro.core.quantization import (
+    NumericsPolicy,
+    Q2_14,
+    QFormat,
+    QTensor,
+    fake_quant_fmt,
+)
 from repro.core.template import Template
 
 __all__ = [
@@ -34,6 +40,8 @@ __all__ = [
     "NetworkPlan",
     "init_cnn",
     "plan_cnn",
+    "quantize_cnn_params",
+    "calibrate_cnn_policy",
     "cnn_forward",
 ]
 
@@ -83,8 +91,21 @@ LENET = CNNSpec(
 CNN_ZOO = {c.name: c for c in (ALEXNET, VGG16, LENET)}
 
 
-def _maxpool(x: jax.Array, w: int) -> jax.Array:
-    """NHWC max pool, window w, stride w (PS-plane op)."""
+def _maxpool(x, w: int):
+    """NHWC max pool, window w, stride w (PS-plane op).
+
+    QTensor inputs pool on the int16 raws directly: dequantization is
+    monotone, so max-of-raw == raw-of-max and the activation never leaves
+    the fixed-point grid for pooling (DESIGN.md §8).
+    """
+    if isinstance(x, QTensor):
+        init = jnp.array(jnp.iinfo(jnp.int16).min, jnp.int16)
+        return QTensor(
+            jax.lax.reduce_window(
+                x.raw, init, jax.lax.max, (1, w, w, 1), (1, w, w, 1), "VALID"
+            ),
+            x.fmt,
+        )
     return jax.lax.reduce_window(
         x, -jnp.inf, jax.lax.max, (1, w, w, 1), (1, w, w, 1), "VALID"
     )
@@ -209,6 +230,59 @@ def plan_cnn(
     return plan
 
 
+def quantize_cnn_params(tpl: Template, spec: CNNSpec, params,
+                        policy: NumericsPolicy):
+    """Quantize-once CNN parameter preparation (DESIGN.md §8).
+
+    Conv and FC weights become per-tensor max-abs calibrated QTensors;
+    biases pin to the activation grid.  Memoized by parameter-tree identity
+    in the engine's qparam cache — repeated inference calls never touch the
+    float weights again.
+    """
+    policy = validate_policy(tpl.config, policy)
+    if not policy.quantized:
+        return params
+    eng = tpl.engine
+
+    def build():
+        def qdense(leaf):
+            # conv (kh, kw, cin, cout) reduces over kh*kw*cin; fc (k, n)
+            # over k — the accumulator headroom rule bounds both
+            axes = tuple(range(leaf["w"].ndim - 1))
+            return {
+                "w": eng.quantize_weight(leaf["w"], policy,
+                                         contraction_axes=axes,
+                                         fused_bias=True),
+                "b": eng.quantize_weight(leaf["b"], policy, fmt=policy.fmt),
+            }
+
+        return {
+            "convs": [qdense(p) for p in params["convs"]],
+            "fcs": [qdense(p) for p in params["fcs"]],
+        }
+
+    return eng.qparams_for(params, policy, build)
+
+
+def calibrate_cnn_policy(tpl: Template, spec: CNNSpec, params, x,
+                         base: Optional[NumericsPolicy] = None) -> NumericsPolicy:
+    """Max-abs activation calibration for the CNN zoo: one eager forward over
+    a calibration batch picks the activation grid (see
+    ``transformer.calibrate_policy`` for the transformer twin).  A QAT
+    network whose activations fit [-2, 2) keeps the paper's Q2.14."""
+    import dataclasses
+
+    base = base or NumericsPolicy("q16")
+    probe_qp = quantize_cnn_params(tpl, spec, params, base)
+    fmt = tpl.engine.calibrate_activation_format(
+        lambda: cnn_forward(tpl, spec, probe_qp, x, policy=base)
+    )
+    policy = dataclasses.replace(base, fmt=fmt)
+    if policy != base:
+        tpl.engine.drop_qparams(params, base)  # release the probe tree
+    return policy
+
+
 def cnn_forward(
     tpl: Template,
     spec: CNNSpec,
@@ -218,6 +292,7 @@ def cnn_forward(
     quantized: bool = False,
     fmt: QFormat = Q2_14,
     plan: Optional[NetworkPlan] = None,
+    policy: Optional[NumericsPolicy] = None,
 ) -> jax.Array:
     """x: (N, H, W, C) -> logits (N, n_classes).
 
@@ -227,7 +302,37 @@ def cnn_forward(
     (and, when quantized, the post-activation Q2.14 snap) are fused into the
     compute unit's write-back.  ``plan`` defaults to the memoized
     :func:`plan_cnn` result for this (config, spec, input shape).
+
+    ``policy``: a quantized :class:`NumericsPolicy` (with a
+    :func:`quantize_cnn_params` tree) runs the *whole network* grid-resident:
+    the input is quantized exactly once, every conv/FC (ReLU fused in-kernel)
+    and every maxpool stays on the int16 grid, and the only dequantization is
+    the exact int32 read-out of the final classifier — one quantize and one
+    dequantize for the entire forward (DESIGN.md §8).
     """
+    if policy is not None and policy.quantized and isinstance(
+        params["convs"][0]["w"], QTensor
+    ):
+        eng = tpl.engine
+        plan = plan or plan_cnn(tpl, spec, x.shape)
+        h = eng.quant(x, policy.fmt)
+        for p, (cout, k, stride, pad, pool), cp in zip(
+            params["convs"], spec.convs, plan.convs
+        ):
+            h = tpl.conv2d(h, p["w"], stride=stride, padding=pad,
+                           bias=p["b"], relu=True, plan=cp)
+            if pool:
+                h = _maxpool(h, pool)
+        h = h.reshape(h.shape[0], -1)
+        last = len(params["fcs"]) - 1
+        for i, (p, gp) in enumerate(zip(params["fcs"], plan.fcs)):
+            if i < last:
+                h = tpl.linear(h, p["w"], p["b"], relu=True, plan=gp)
+            else:
+                # final classifier: exact accumulator read-out (the single
+                # counted dequantize of the whole network)
+                h = tpl.linear(h, p["w"], p["b"], wide=True, plan=gp)
+        return h
     plan = plan or plan_cnn(tpl, spec, x.shape)
     fq = (lambda a: fake_quant_fmt(a, fmt)) if quantized else (lambda a: a)
     qo = fmt if quantized else None

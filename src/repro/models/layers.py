@@ -14,12 +14,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import NumericsPolicy, QTensor
 from repro.core.template import Template
 from repro.parallel.sharding import constrain
 
 __all__ = [
     "init_dense",
     "dense",
+    "mlp_islands",
     "rms_norm",
     "layer_norm",
     "apply_rope",
@@ -112,13 +114,41 @@ def mlp_axes(cfg) -> dict:
     return {"up": {"w": ("embed", "mlp")}, "down": {"w": ("mlp", "embed")}}
 
 
-def mlp(tpl: Template, cfg, p, x: jax.Array) -> jax.Array:
+def mlp(tpl: Template, cfg, p, x: jax.Array,
+        policy: Optional[NumericsPolicy] = None) -> jax.Array:
+    """FFN.  Under a quantized policy (QTensor weights, DESIGN.md §8) the
+    projections run grid-resident: the post-norm input is quantized *once*
+    and shared by gate/up, and only the nonlinearity — silu/gelu are float
+    islands; fixed point cannot express them — crosses back to float.  The
+    down projection consumes the requantized activation directly, so the
+    only float hops per FFN are the designated activation island.
+    """
+    if policy is not None and policy.quantized and isinstance(p["up"]["w"], QTensor):
+        eng = tpl.engine
+        xq = eng.quant(x, policy.fmt)
+        if cfg.act == "swiglu":
+            h = jax.nn.silu(eng.dequant(dense(tpl, p["gate"], xq))) * eng.dequant(
+                dense(tpl, p["up"], xq)
+            )
+        else:
+            h = jax.nn.gelu(eng.dequant(dense(tpl, p["up"], xq)))
+        h = constrain(h, "batch", None, "mlp")
+        return eng.dequant(dense(tpl, p["down"], eng.quant(h, policy.fmt)))
     if cfg.act == "swiglu":
         h = jax.nn.silu(dense(tpl, p["gate"], x)) * dense(tpl, p["up"], x)
     else:
         h = jax.nn.gelu(dense(tpl, p["up"], x))
     h = constrain(h, "batch", None, "mlp")
     return dense(tpl, p["down"], h)
+
+
+def mlp_islands(cfg) -> dict:
+    """Designated float islands of one quantized FFN: (quantize, dequantize)
+    call counts.  swiglu: quant {x, silu*up product}, dequant {gate, up,
+    down}; gelu: quant {x, gelu out}, dequant {up, down}."""
+    if cfg.act == "swiglu":
+        return {"quantize": 2, "dequantize": 3}
+    return {"quantize": 2, "dequantize": 2}
 
 
 def sinusoidal_positions(n: int, d: int, dtype=jnp.float32) -> jax.Array:

@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
 
+from repro.core.engine import validate_policy
+from repro.core.quantization import NumericsPolicy, QTensor
 from repro.core.template import Template
 from repro.parallel.sharding import constrain
 
@@ -41,6 +43,7 @@ from . import ssm as ssm_mod
 from .attention import (
     attention,
     attention_axes,
+    attention_islands,
     decode_attention,
     init_attention,
     init_layer_cache,
@@ -51,6 +54,7 @@ from .layers import (
     init_norm,
     mlp,
     mlp_axes,
+    mlp_islands,
     norm,
     sinusoidal_positions,
 )
@@ -60,6 +64,9 @@ __all__ = [
     "plan_pattern",
     "init_params",
     "param_axes",
+    "quantize_params",
+    "calibrate_policy",
+    "q16_island_counts",
     "forward",
     "loss_fn",
     "prefill",
@@ -222,12 +229,124 @@ def param_axes(cfg):
 
 
 # ---------------------------------------------------------------------------
+# fixed-point residency: quantize-once parameter preparation (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def quantize_params(tpl: Template, cfg, params, policy: NumericsPolicy):
+    """Prepare the quantized parameter tree for a q16 forward pass.
+
+    Every GEMM weight (attention projections, FFN, LM head — including the
+    tied-embedding head, which gets its own int16 copy so the float lookup
+    table stays untouched) becomes a :class:`QTensor` with a per-tensor
+    max-abs calibrated format; biases pin to the activation grid; norms and
+    the embedding table stay float (they live on float islands).  Memoized by
+    parameter-tree identity in the engine's qparam cache, so weights are
+    quantized **exactly once per process** no matter how many generate() /
+    scheduler sessions share the tree.
+
+    Raises ``ValueError`` for unsupported combos: a non-q16 backend, or a
+    family whose mixers cannot soundly run on the grid (recurrent/SSM state,
+    cross-attention, MoE dispatch).
+    """
+    policy = validate_policy(tpl.config, policy)
+    if not policy.quantized:
+        return params
+    pattern = plan_pattern(cfg)
+    bad = [lp.mixer for lp in pattern if lp.mixer != "attn"]
+    if bad or any(lp.cross or lp.moe for lp in pattern):
+        raise ValueError(
+            f"NumericsPolicy('q16') supports dense full-attention stacks "
+            f"only; {cfg.name} ({cfg.family}) has "
+            f"{bad or 'cross-attention / MoE layers'}"
+        )
+    eng = tpl.engine
+
+    def build():
+        def qdense(leaf):
+            # shape (..., k, n): k is the contraction the accumulator
+            # headroom rule bounds (Engine.quantize_weight)
+            out = {"w": eng.quantize_weight(leaf["w"], policy,
+                                            contraction_axes=(-2,),
+                                            fused_bias="b" in leaf)}
+            if "b" in leaf:
+                out["b"] = eng.quantize_weight(leaf["b"], policy, fmt=policy.fmt)
+            return out
+
+        def qlayer(lp):
+            out = dict(lp)  # norms (and anything float-island) pass through
+            out["attn"] = {k: qdense(v) for k, v in lp["attn"].items()}
+            out["ffn"] = {k: qdense(v) for k, v in lp["ffn"].items()}
+            return out
+
+        qp = dict(params)
+        qp["blocks"] = tuple(qlayer(b) for b in params["blocks"])
+        qp["tail"] = tuple(qlayer(tc) for tc in params["tail"])
+        head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        qp["lm_head"] = {"w": eng.quantize_weight(head_w, policy,
+                                                  contraction_axes=(-2,))}
+        return qp
+
+    return eng.qparams_for(params, policy, build)
+
+
+def calibrate_policy(tpl: Template, cfg, params, tokens,
+                     base: Optional[NumericsPolicy] = None) -> NumericsPolicy:
+    """The small max-abs calibration pass: pick the activation grid.
+
+    Runs one eager prefill over ``tokens`` (a calibration batch) with every
+    island-exit quantization recording the magnitude it snaps, then returns
+    ``base`` with the smallest Qm.n format whose range covers the observed
+    maximum.  Random-init or wide-ranged models land on e.g. Q4.12 instead
+    of saturating the paper's Q2.14 at ±2; a QAT-trained network whose
+    activations fit [-2, 2) keeps Q2.14.  Quantize the final parameter tree
+    *after* calibration — :func:`quantize_params` keys its cache by policy.
+    """
+    import dataclasses
+
+    base = base or NumericsPolicy("q16")
+    probe_qp = quantize_params(tpl, cfg, params, base)
+    fmt = tpl.engine.calibrate_activation_format(
+        lambda: prefill(tpl, cfg, probe_qp, tokens,
+                        cache_len=tokens.shape[1], policy=base)
+    )
+    policy = dataclasses.replace(base, fmt=fmt)
+    if policy != base:
+        # the probe tree was built under the provisional base grid — drop it
+        # so it doesn't pin an extra int16 weight copy next to the real one
+        tpl.engine.drop_qparams(params, base)
+    return policy
+
+
+def q16_island_counts(cfg, *, mode: str = "decode") -> dict:
+    """The residency law: designated float islands of one traced q16 step.
+
+    Sums the per-sublayer island counts (:func:`attention_islands`,
+    :func:`mlp_islands`) over the *traced* layer bodies, plus the head (one
+    quantize of the post-final-norm hidden, one exactly-descaled logits
+    read-out).  Counters tick at trace time and ``lax.scan`` stages each
+    pattern-position body exactly once regardless of depth, so the stack
+    contributes ``len(pattern) + n_tail`` bodies — the law still catches any
+    un-designated float round-trip, because an extra hop inside the layer
+    body inflates the count for every scanned layer at once (DESIGN.md §8).
+    """
+    pattern, _, r = _split(cfg)
+    att = attention_islands(cfg, mode=mode, cached=(mode == "prefill"))
+    ffn = mlp_islands(cfg)
+    bodies = len(pattern) + r
+    return {
+        "quantize": bodies * (att["quantize"] + ffn["quantize"]) + 1,
+        "dequantize": bodies * (att["dequantize"] + ffn["dequantize"]) + 1,
+    }
+
+
+# ---------------------------------------------------------------------------
 # per-layer execution
 # ---------------------------------------------------------------------------
 
 
 def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
-               cache=None, ctx=None, cache_len=0, t=None):
+               cache=None, ctx=None, cache_len=0, t=None, policy=None):
     """Returns (h, new_cache_or_None, aux)."""
     newc = {}
     aux = jnp.zeros((), jnp.float32)
@@ -240,7 +359,8 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
             a_in = constrain(a_in, "batch", "seq_act", "act_embed")
         if mode == "decode":
             out, c = decode_attention(
-                tpl, p["attn"], a_in, cache["attn"], cfg=cfg, t=t, window=window
+                tpl, p["attn"], a_in, cache["attn"], cfg=cfg, t=t, window=window,
+                policy=policy,
             )
             newc["attn"] = c
         else:
@@ -249,7 +369,7 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
                 clen = min(window, cache_len) if window else cache_len
             out, c = attention(
                 tpl, p["attn"], a_in, cfg=cfg, positions=positions,
-                causal=causal, window=window, cache_len=clen,
+                causal=causal, window=window, cache_len=clen, policy=policy,
             )
             if mode == "prefill":
                 newc["attn"] = c
@@ -312,7 +432,7 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
         if plan.moe:
             out, aux = moe_mod.moe_ffn(tpl, cfg, p["ffn"], f_in)
         else:
-            out = mlp(tpl, cfg, p["ffn"], f_in)
+            out = mlp(tpl, cfg, p["ffn"], f_in, policy=policy)
         if mode != "decode":
             out = constrain(out, "batch", "seq_act", "act_embed")
         h = h + out
@@ -327,7 +447,8 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
 
 
 def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
-               cache=None, ctx=None, cache_len=0, t=None, remat=False):
+               cache=None, ctx=None, cache_len=0, t=None, remat=False,
+               policy=None):
     """Scan the stacked groups + run tail layers.  Returns (h, cache', aux)."""
     n_tail = len(params["tail"]) if "tail" in params else 0
 
@@ -337,7 +458,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             for i, plan in enumerate(pattern):
                 hh, _, a = _run_layer(
                     tpl, cfg, plan, xs[i], hh,
-                    positions=positions, mode=mode, ctx=ctx,
+                    positions=positions, mode=mode, ctx=ctx, policy=policy,
                 )
                 aux = aux + a
             return (hh, aux), None
@@ -356,7 +477,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         for j in range(n_tail):
             h, _, a = _run_layer(
                 tpl, cfg, pattern[j], params["tail"][j], h,
-                positions=positions, mode=mode, ctx=ctx,
+                positions=positions, mode=mode, ctx=ctx, policy=policy,
             )
             aux = aux + a
         return h, None, aux
@@ -368,7 +489,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             for i, plan in enumerate(pattern):
                 hh, c, a = _run_layer(
                     tpl, cfg, plan, xs[i], hh, positions=positions,
-                    mode=mode, ctx=ctx, cache_len=cache_len,
+                    mode=mode, ctx=ctx, cache_len=cache_len, policy=policy,
                 )
                 caches.append(c)
                 aux = aux + a
@@ -381,7 +502,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         for j in range(n_tail):
             h, c, a = _run_layer(
                 tpl, cfg, pattern[j], params["tail"][j], h, positions=positions,
-                mode=mode, ctx=ctx, cache_len=cache_len,
+                mode=mode, ctx=ctx, cache_len=cache_len, policy=policy,
             )
             tail_caches.append(c)
             aux = aux + a
@@ -396,6 +517,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             hh, c, _ = _run_layer(
                 tpl, cfg, plan, p_group[i], hh,
                 positions=positions, mode=mode, cache=c_group[i], t=t,
+                policy=policy,
             )
             newcs.append(c)
         return hh, tuple(newcs)
@@ -406,6 +528,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         h, c, _ = _run_layer(
             tpl, cfg, pattern[j], params["tail"][j], h,
             positions=positions, mode=mode, cache=cache["tail"][j], t=t,
+            policy=policy,
         )
         tail_caches.append(c)
     return h, {"blocks": cache_blocks, "tail": tuple(tail_caches)}, jnp.zeros((), jnp.float32)
@@ -440,15 +563,29 @@ def _embed_tokens(cfg, params, tokens):
     return constrain(h, "batch", "seq_act", "act_embed")
 
 
-def _head(tpl, cfg, params, h):
+def _head(tpl, cfg, params, h, *, policy=None):
     h = norm(cfg, params["final_norm"], h)
-    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
-    logits = tpl.matmul(h, w)
+    if (
+        policy is not None and policy.quantized
+        and isinstance(params.get("lm_head", {}).get("w"), QTensor)
+    ):
+        # final logits boundary: quantize the post-norm hidden once, read the
+        # int32 accumulator out exactly — logits never saturate on the grid
+        hq = tpl.quant(h, policy.fmt)
+        logits = tpl.matmul(hq, params["lm_head"]["w"], wide=True)
+    else:
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        logits = tpl.matmul(h, w)
     return constrain(logits, "batch", "seq_act", "vocab")
 
 
-def forward(tpl: Template, cfg, params, tokens, *, ctx=None, mode: str = "train"):
-    """Teacher-forced full-sequence forward.  tokens: (B, S) -> logits (B,S,V)."""
+def forward(tpl: Template, cfg, params, tokens, *, ctx=None, mode: str = "train",
+            policy: Optional[NumericsPolicy] = None):
+    """Teacher-forced full-sequence forward.  tokens: (B, S) -> logits (B,S,V).
+
+    ``policy``: a quantized :class:`NumericsPolicy` runs the stack
+    grid-resident — pass the matching :func:`quantize_params` tree as
+    ``params`` (the QTensor weights carry the residency)."""
     s = tokens.shape[1]
     h = _embed_tokens(cfg, params, tokens)
     if getattr(cfg, "abs_pos", False):
@@ -459,9 +596,9 @@ def forward(tpl: Template, cfg, params, tokens, *, ctx=None, mode: str = "train"
     positions = jnp.arange(s)
     h, _, aux = _run_stack(
         tpl, cfg, params, h, pattern=pattern, mode=mode, positions=positions,
-        ctx=ctx, remat=cfg.remat,
+        ctx=ctx, remat=cfg.remat, policy=policy,
     )
-    return _head(tpl, cfg, params, h), aux
+    return _head(tpl, cfg, params, h, policy=policy), aux
 
 
 def loss_fn(tpl: Template, cfg, params, batch, aux_weight: float = 0.01):
@@ -484,7 +621,8 @@ def loss_fn(tpl: Template, cfg, params, batch, aux_weight: float = 0.01):
 
 
 def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
-            cache_len: Optional[int] = None, last_pos=None):
+            cache_len: Optional[int] = None, last_pos=None,
+            policy: Optional[NumericsPolicy] = None):
     """Process the prompt; return (last-position logits (B,V), decode cache).
 
     ``last_pos`` (scalar or (B,) int32, traced) selects which position's
@@ -502,7 +640,7 @@ def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
     pattern, _, _ = _split(cfg)
     h, cache, _ = _run_stack(
         tpl, cfg, params, h, pattern=pattern, mode="prefill",
-        positions=jnp.arange(s), ctx=ctx, cache_len=cache_len,
+        positions=jnp.arange(s), ctx=ctx, cache_len=cache_len, policy=policy,
     )
     if last_pos is None:
         h_last = h[:, -1:]
@@ -512,7 +650,7 @@ def prefill(tpl: Template, cfg, params, tokens, *, ctx=None,
             h_last = jax.lax.dynamic_slice_in_dim(h, lp, 1, axis=1)
         else:  # per-row last positions
             h_last = jnp.take_along_axis(h, lp[:, None, None].astype(jnp.int32), axis=1)
-    logits = _head(tpl, cfg, params, h_last)
+    logits = _head(tpl, cfg, params, h_last, policy=policy)
     return logits[:, 0], cache
 
 
@@ -522,10 +660,16 @@ def _sinusoid_at(t, d, dtype):
     return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)]).astype(dtype)
 
 
-def decode_step(tpl: Template, cfg, params, token, t, cache):
+def decode_step(tpl: Template, cfg, params, token, t, cache,
+                policy: Optional[NumericsPolicy] = None):
     """One decode step.  token: (B,1) int32; t: scalar int32 position, or a
     per-row (B,) position vector when the cache is slot-indexed
     (``init_cache(..., per_slot=True)`` — continuous batching).
+
+    Under a quantized ``policy`` (with a :func:`quantize_params` tree) the
+    step is grid-resident end to end: every projection consumes/produces
+    int16 QTensors, the ring cache stores int16 raws, and float appears only
+    at the designated islands (:func:`q16_island_counts`).
 
     Returns (logits (B,V), new_cache)."""
     t = jnp.asarray(t, jnp.int32)
@@ -539,9 +683,9 @@ def decode_step(tpl: Template, cfg, params, token, t, cache):
     pattern, _, _ = _split(cfg)
     h, cache, _ = _run_stack(
         tpl, cfg, params, h, pattern=pattern, mode="decode",
-        positions=t, t=t, cache=cache,
+        positions=t, t=t, cache=cache, policy=policy,
     )
-    logits = _head(tpl, cfg, params, h)
+    logits = _head(tpl, cfg, params, h, policy=policy)
     return logits[:, 0], cache
 
 

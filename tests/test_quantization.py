@@ -1,4 +1,5 @@
-"""Q2.14 fixed-point numerics: roundtrip, saturation, STE, hypothesis props."""
+"""Q2.14 fixed-point numerics: roundtrip, saturation, STE, hypothesis props,
+QTensor/calibration basics, and write-back bit-exactness."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,13 +7,20 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quantization import (
+    NumericsPolicy,
     Q2_14,
     QFormat,
+    QTensor,
+    calibrate_format,
     dequantize,
     fake_quant_fmt,
     qmatmul_real,
     qmatmul_ref,
+    qtensor_matmul_ref,
     quantize,
+    quantize_qtensor,
+    requantize_i32,
+    requantize_i32_to_i16,
 )
 
 
@@ -91,3 +99,131 @@ def test_quantize_is_round_to_nearest():
     x = jnp.array([0.4 * res, 0.6 * res, -0.6 * res])
     q = np.asarray(quantize(x))
     np.testing.assert_array_equal(q, [0, 1, -1])
+
+
+# ---------------------------------------------------------------------------
+# edge cases: saturation boundary, tie rounding, write-back bit-exactness
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(min_value=0.0, max_value=8.0, allow_nan=False))
+@settings(max_examples=150, deadline=None)
+def test_saturation_pins_to_exact_boundary(x):
+    """Everything at/above 2 - 2^-14 saturates to *exactly* raw_max (and the
+    negative side to raw_min): the boundary is the representable value, not
+    an off-by-one neighbor."""
+    if x >= Q2_14.max_val:
+        assert int(quantize(jnp.float32(x))) == Q2_14.raw_max
+        assert float(dequantize(quantize(jnp.float32(x)))) == pytest.approx(
+            Q2_14.max_val)
+    if -x <= Q2_14.min_val:
+        assert int(quantize(jnp.float32(-x))) == Q2_14.raw_min
+        assert float(dequantize(quantize(jnp.float32(-x)))) == pytest.approx(
+            Q2_14.min_val)
+
+
+@given(st.integers(min_value=-(2 ** 14), max_value=2 ** 14 - 1))
+@settings(max_examples=100, deadline=None)
+def test_quantize_tie_rounds_half_to_even(n):
+    """Exact half-grid inputs (n + 0.5)·2^-14 follow round-half-to-even —
+    the IEEE default ``jnp.round`` implements, matching the kernel's
+    quantize stage bit-for-bit."""
+    x = (n + 0.5) * Q2_14.resolution
+    got = int(quantize(jnp.float32(x)))
+    want = n if n % 2 == 0 else n + 1  # nearest even neighbor of n + 0.5
+    assert got == want
+
+
+def test_requantize_tie_rounds_half_up():
+    """The accumulator write-back adds 2^(shift-1) then arithmetic-shifts:
+    ties round toward +inf (half-up), the FPGA adder-tree convention —
+    *documented* difference from the quantize stage's half-to-even."""
+    f = Q2_14.frac_bits
+    half = 1 << (f - 1)
+    acc = jnp.array([half, 3 * half, -half, -3 * half], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(requantize_i32_to_i16(acc)), [1, 2, 0, -1]
+    )
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+@settings(max_examples=200, deadline=None)
+def test_requantize_matches_qmatmul_ref_writeback_bitforbit(seed):
+    """requantize_i32_to_i16 on a raw int32 accumulator is bit-for-bit the
+    write-back qmatmul_ref performs (k=4 keeps the accumulator exact)."""
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.integers(-(2 ** 15), 2 ** 15, size=(3, 4)), jnp.int16)
+    wq = jnp.asarray(rng.integers(-(2 ** 15), 2 ** 15, size=(4, 5)), jnp.int16)
+    acc = jnp.dot(xq.astype(jnp.int32), wq.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(requantize_i32_to_i16(acc)), np.asarray(qmatmul_ref(xq, wq))
+    )
+
+
+@given(st.integers(min_value=-(2 ** 30), max_value=2 ** 30))
+@settings(max_examples=100, deadline=None)
+def test_requantize_shift_grid(acc):
+    """requantize_i32 with shift 0 / negative shifts is the exact re-scale
+    (saturating); positive shifts divide with round-half-up."""
+    a = jnp.int32(acc)
+    assert int(requantize_i32(a, 0)) == int(
+        np.clip(acc, Q2_14.raw_min, Q2_14.raw_max))
+    # negative shift: exact up-scale in int32 arithmetic (emulate the wrap)
+    doubled = int((np.asarray([acc], np.int32) << 1)[0])
+    assert int(requantize_i32(a, -1)) == int(
+        np.clip(doubled, Q2_14.raw_min, Q2_14.raw_max))
+    got = int(requantize_i32(a, 3))
+    want = int(np.clip((acc + 4) >> 3, Q2_14.raw_min, Q2_14.raw_max))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# QTensor / calibration / mixed-format oracle
+# ---------------------------------------------------------------------------
+
+
+def test_qtensor_is_a_pytree():
+    q = quantize_qtensor(jnp.array([0.5, -1.0]), Q2_14)
+    leaves, treedef = jax.tree.flatten(q)
+    assert len(leaves) == 1 and leaves[0].dtype == jnp.int16
+    q2 = jax.tree.unflatten(treedef, leaves)
+    assert q2.fmt == Q2_14
+    out = jax.jit(lambda t: t)(q)  # flows through jit unchanged
+    assert isinstance(out, QTensor) and out.fmt == Q2_14
+    np.testing.assert_array_equal(np.asarray(out.raw), np.asarray(q.raw))
+
+
+@given(st.floats(min_value=0.0, max_value=200.0, allow_nan=False))
+@settings(max_examples=100, deadline=None)
+def test_calibrate_format_covers_and_is_minimal(maxabs):
+    fmt = calibrate_format(jnp.float32(maxabs))
+    assert maxabs <= fmt.max_val or fmt.int_bits == 16  # covered (or maxed out)
+    if fmt.int_bits > 1 and fmt.int_bits < 16:
+        tighter = QFormat(fmt.int_bits - 1, fmt.frac_bits + 1)
+        assert maxabs > tighter.max_val  # one fewer int bit would clip
+
+
+def test_policy_validation():
+    assert NumericsPolicy("q16").quantized
+    assert not NumericsPolicy("float").quantized
+    with pytest.raises(ValueError):
+        NumericsPolicy("int8")
+
+
+@given(st.integers(min_value=10, max_value=15), st.integers(min_value=8, max_value=15))
+@settings(max_examples=25, deadline=None)
+def test_mixed_format_matmul_oracle_vs_same_format(fa, fw):
+    """qtensor_matmul_ref with equal formats degenerates to qmatmul_ref."""
+    key = jax.random.PRNGKey(fa * 16 + fw)
+    x = jax.random.normal(key, (4, 8)) * 0.05
+    w = jax.random.normal(jax.random.fold_in(key, 1), (8, 3)) * 0.05
+    xq = quantize_qtensor(x, QFormat(16 - fa, fa))
+    wq = quantize_qtensor(w, QFormat(16 - fw, fw))
+    out = qtensor_matmul_ref(xq, wq, QFormat(16 - fa, fa))
+    # exact emulation in float: descale, dot, requantize
+    acc = np.asarray(xq.raw, np.int64) @ np.asarray(wq.raw, np.int64)
+    shift = fa + fw - fa
+    want = np.clip((acc + (1 << (shift - 1))) >> shift,
+                   xq.fmt.raw_min, xq.fmt.raw_max) if shift > 0 else acc
+    np.testing.assert_array_equal(np.asarray(out.raw, np.int64), want)

@@ -248,6 +248,54 @@ def test_batched_tokens_byte_identical_to_unbatched(setup):
         )
 
 
+def test_q16_scheduler_decode_determinism():
+    """The PR 4 mixed trace replayed under NumericsPolicy('q16') yields
+    byte-identical tokens to the unbatched q16 `generate()`, with an int16
+    slot-indexed KV cache, and the warm registry replay reports zero new DSE
+    searches (DESIGN.md §8)."""
+    from repro.core.quantization import NumericsPolicy
+
+    cfg = reduced(get_config("qwen2-0.5b"))
+    tpl = default_template("q16")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    cal = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab)
+    policy = T.calibrate_policy(tpl, cfg, params, cal)
+    sched = ServeScheduler(
+        cfg, params, tpl=tpl, clock=VirtualClock(), policy=policy,
+        sched=SchedulerConfig(ladder=LADDER, slots=3, max_new_limit=MAX_NEW),
+    )
+    sched.warmup()
+    assert jax.tree.leaves(sched.cache or {}) == []  # cache built on admit
+    m0 = sched.registry.misses
+    lengths = [5, 9, 3, 17, 8, 24, 2]  # the PR 4 mixed trace
+    trace = [Request(prompt=p, max_new=MAX_NEW, arrival=float(i % 2))
+             for i, p in enumerate(prompts_of(lengths))]
+    replay_trace(sched, trace, tick=1.0)
+    assert sched.counters["completed"] == len(trace)
+    assert sched.registry.misses == m0, (
+        "warm q16 registry replay must report zero new DSE searches")
+    assert sched.cache["blocks"][0]["attn"]["k"].dtype == jnp.int16
+    for r in trace:
+        ref = np.asarray(generate(cfg, params, jnp.asarray([r.prompt], jnp.int32),
+                                  gen=r.max_new, tpl=tpl, policy=policy))[0]
+        got = sched.results[r.rid].generated
+        assert got == ref.tolist(), (
+            f"rid {r.rid} (len {len(r.prompt)}): q16 scheduler {got} "
+            f"!= unbatched q16 {ref.tolist()}"
+        )
+
+
+def test_scheduler_rejects_unsupported_policy_combos(setup):
+    """--backend/--policy mismatches fail at construction with clear errors
+    instead of silently serving the wrong numerics."""
+    from repro.core.quantization import NumericsPolicy
+
+    cfg, params, tpl = setup  # tpl is the float (xla) template
+    with pytest.raises(ValueError, match="requires the 'q16' backend"):
+        ServeScheduler(cfg, params, tpl=tpl, clock=VirtualClock(),
+                       policy=NumericsPolicy("q16"))
+
+
 # ---------------------------------------------------------------------------
 # bucket-ladder properties (hypothesis)
 # ---------------------------------------------------------------------------
