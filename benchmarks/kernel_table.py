@@ -254,10 +254,12 @@ def scheduler_mixed_trace_row() -> dict:
 
     A small mixed prompt-length trace through the serve scheduler on a
     virtual clock (pallas backend, so every GEMM consults the PlanRegistry):
-    reports coalescing (decode steps vs the sequential equivalent), mean
-    slot occupancy, the DSE misses incurred *after* warmup (must be 0 — the
-    bucket ladder is the whole point), and a byte-identical parity check of
-    two requests against the unbatched `generate()` path.
+    reports decode coalescing (decode steps vs the sequential equivalent),
+    prefill coalescing (admitted rows per (B, L) prefill launch — with at
+    most one launch per occupied bucket rung per tick), mean slot occupancy,
+    the DSE misses incurred *after* warmup (must be 0 — the bucket ladder is
+    the whole point), and a byte-identical parity check of two requests
+    against the unbatched `generate()` path.
     """
     from repro.configs import get_config, reduced
     from repro.core.template import default_template
@@ -295,6 +297,13 @@ def scheduler_mixed_trace_row() -> dict:
                                gen=r.max_new, tpl=tpl))[0].tolist()
         for r in trace[:2]
     )
+    # per tick, one coalesced launch per occupied rung — never one per row
+    by_rid = {r.rid: r for r in trace}
+    launches_bounded = all(
+        ev["prefill_launches"] <= len({by_rid[rid].bucket
+                                       for rid in ev["admitted"]})
+        for ev in sched.history
+    )
     return {
         "bench": "scheduler_mixed_trace",
         "requests": len(trace),
@@ -303,6 +312,12 @@ def scheduler_mixed_trace_row() -> dict:
         "completed": c["completed"],
         "decode_steps": c["decode_steps"],
         "sequential_decode_steps": sequential_steps,
+        "prefill_launches": c["prefill_launches"],
+        "prefill_rows": c["prefill_rows"],
+        "prefill_coalescing": stats["prefill_coalescing"],
+        "launches_bounded_by_rungs": launches_bounded,
+        "ttft_p50": round(stats["ttft"].get("p50", 0.0), 3),
+        "ttft_p99": round(stats["ttft"].get("p99", 0.0), 3),
         "mean_occupancy": stats["mean_occupancy"],
         "tokens": c["tokens"],
         "wall_s_interpret": round(wall, 3),
@@ -354,6 +369,11 @@ def main():
     assert sched_row["byte_identical_vs_unbatched"], \
         "coalesced decode diverged from the unbatched path"
     assert sched_row["decode_steps"] < sched_row["sequential_decode_steps"]
+    assert sched_row["prefill_launches"] < sched_row["requests"], \
+        "bursty admissions must coalesce into fewer (B, L) prefill launches"
+    assert sched_row["prefill_coalescing"] > 1.0
+    assert sched_row["launches_bounded_by_rungs"], \
+        "a tick issued more prefill launches than occupied bucket rungs"
     print("\n== VGG16 @ 512x512 network plan (route/tile regressions diff here) ==")
     from repro.core.template import default_template
     from repro.models.cnn import CNN_ZOO, plan_cnn

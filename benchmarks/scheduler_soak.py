@@ -1,13 +1,24 @@
-"""Scheduler soak: a mixed prefill/decode trace on the virtual clock.
+"""Scheduler soak: batched vs sequential prefill on the virtual clock.
 
     PYTHONPATH=src python -m benchmarks.scheduler_soak --requests 200 \
         --out scheduler_stats.json
 
-Replays a deterministic mixed prompt-length arrival trace (every bucket of
-the ladder sees traffic; arrivals part-burst, part-spaced) through the
-continuous-batching scheduler under a :class:`VirtualClock` — no wall-clock
-sleeps, so the soak is pure scheduler + compute work.  Emits the per-bucket
-stats JSON as an artifact.
+Replays ONE deterministic mixed prompt-length closed-loop burst (every bucket
+of the ladder sees traffic; all arrivals at t=0, admission driven by slot
+frees) through the continuous-batching scheduler twice — once in ``prefill_mode="sequential"``
+(the pre-coalescing behaviour: one (1, L) prefill launch per admission) and
+once in the default batched mode with chunked long-prompt prefill.  Both runs
+use a :class:`VirtualClock` with a per-launch cost, so throughput and TTFT
+are measured in deterministic virtual seconds — machine-independent, valid to
+compare against a stored baseline in CI.
+
+The soak asserts the batched run beats the sequential one on prefill
+launches, virtual tokens/s, and p99 TTFT, AND that both modes generate
+byte-identical tokens per request (coalescing is a pure launch-count
+optimisation).  With ``--baseline`` pointing at a stored sequential-run JSON
+(``benchmarks/baselines/scheduler_soak_pr4.json``) and matching knobs, the
+batched run must also beat the stored numbers; ``--write-baseline`` emits
+that file from the sequential run.
 
 With ``REPRO_PLAN_ASSERT_WARM=1`` the soak is a CI gate: the plan store
 named by ``REPRO_PLAN_STORE`` must warm-start the registry and the *entire*
@@ -38,6 +49,68 @@ from repro.models import transformer as T
 
 LADDER = (8, 16, 32)
 
+#: knobs that must match for a stored baseline row to be comparable
+BASELINE_KEYS = ("arch", "backend", "requests", "slots", "gen", "seed",
+                 "ladder", "tick", "launch_cost")
+
+
+def build_trace(args, vocab):
+    """The soak trace: a closed-loop burst — every request arrives at t=0 and
+    admission is driven purely by slot frees.  (Timed arrivals would couple
+    the trace to each mode's virtual launch costs, making the A/B comparison
+    measure arrival phasing instead of coalescing.)  Rebuilt fresh per run —
+    Request objects are mutated by the scheduler."""
+    return synthetic_trace(args.requests, seed=args.seed, vocab=vocab,
+                           ladder=LADDER, max_new=args.gen)
+
+
+def run_mode(args, cfg, tpl, params, *, mode: str, chunk: int) -> dict:
+    sched = ServeScheduler(
+        cfg, params, tpl=tpl, clock=VirtualClock(),
+        sched=SchedulerConfig(ladder=LADDER, slots=args.slots,
+                              max_new_limit=args.gen,
+                              max_queue=max(256, args.requests),
+                              prefill_mode=mode, prefill_chunk=chunk),
+    )
+    t0 = time.time()
+    sched.warmup()
+    warm_s = time.time() - t0
+    trace = build_trace(args, cfg.vocab)
+    t0 = time.time()
+    stats = replay_trace(sched, trace, tick=args.tick,
+                         launch_cost=args.launch_cost)
+    soak_s = time.time() - t0
+    if sched.counters["completed"] != args.requests:
+        raise RuntimeError(
+            f"soak[{mode}] incomplete: {sched.counters['completed']}"
+            f"/{args.requests} requests completed")
+    c = sched.counters
+    vt = sched.clock.now()
+    ttft = stats["ttft"]
+    return {
+        "mode": mode,
+        "prefill_chunk": chunk,
+        "warmup_s": round(warm_s, 2),
+        "soak_s": round(soak_s, 2),
+        "tokens": c["tokens"],
+        "tokens_per_s_wall": round(c["tokens"] / max(soak_s, 1e-9), 1),
+        "virtual_time": round(vt, 2),
+        "tokens_per_vs": round(c["tokens"] / max(vt, 1e-9), 3),
+        "prefill_launches": c["prefill_launches"],
+        "prefill_coalescing": stats["prefill_coalescing"],
+        "chunk_steps": c["chunk_steps"],
+        "decode_steps": c["decode_steps"],
+        "launches": c["prefill_launches"] + c["chunk_steps"] + c["decode_steps"],
+        "ttft_p50": round(ttft.get("p50", 0.0), 3),
+        "ttft_p99": round(ttft.get("p99", 0.0), 3),
+        "ttft_mean": round(ttft.get("mean", 0.0), 3),
+        "stats": stats,
+        # keyed by trace position — rids are globally unique across runs
+        "generated": {i: list(sched.results[r.rid].generated)
+                      for i, r in enumerate(trace)},
+        "stats_line": sched.stats_line(),
+    }
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -47,8 +120,25 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--gen", type=int, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunk width for the batched run (0 = whole-bucket; "
+                         "chunking trades extra launches for bounded per-tick "
+                         "prefill work, so the launch-count soak gates run "
+                         "with it off)")
+    ap.add_argument("--tick", type=float, default=0.25,
+                    help="virtual seconds per scheduler tick")
+    ap.add_argument("--launch-cost", type=float, default=0.05,
+                    help="virtual seconds charged per compute launch — makes "
+                         "launch-count savings visible in virtual time")
+    ap.add_argument("--baseline",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "baselines",
+                                         "scheduler_soak_pr4.json"),
+                    help="stored sequential-run JSON to beat ('' = skip)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the sequential run to --baseline and exit 0")
     ap.add_argument("--out", default="scheduler_stats.json",
-                    help="per-bucket stats JSON artifact path ('' = skip)")
+                    help="soak comparison JSON artifact path ('' = skip)")
     args = ap.parse_args(argv)
 
     store_path, loaded = warm_start_plan_store()
@@ -59,53 +149,96 @@ def main(argv=None):
     cfg = reduced(get_config(args.arch))
     tpl = default_template(args.backend)
     params = T.init_params(jax.random.PRNGKey(args.seed), cfg)
-    sched = ServeScheduler(
-        cfg, params, tpl=tpl, clock=VirtualClock(),
-        sched=SchedulerConfig(ladder=LADDER, slots=args.slots,
-                              max_new_limit=args.gen),
-    )
-    t0 = time.time()
-    sched.warmup()
-    warm_s = time.time() - t0
-    # half the trace arrives as a burst at t=0, half spaced out — both the
-    # saturated and the trickle regime in one soak
-    burst = synthetic_trace(args.requests // 2, seed=args.seed,
-                            vocab=cfg.vocab, ladder=LADDER, max_new=args.gen)
-    spaced = synthetic_trace(args.requests - len(burst), seed=args.seed + 1,
-                             vocab=cfg.vocab, ladder=LADDER, max_new=args.gen,
-                             arrival_every=0.5)
-    t0 = time.time()
-    stats = replay_trace(sched, burst + spaced, tick=0.25)
-    soak_s = time.time() - t0
+
+    knobs = {"arch": cfg.name, "backend": args.backend,
+             "requests": args.requests, "slots": args.slots, "gen": args.gen,
+             "seed": args.seed, "ladder": list(LADDER), "tick": args.tick,
+             "launch_cost": args.launch_cost}
+
+    seq = run_mode(args, cfg, tpl, params, mode="sequential", chunk=0)
+    bat = run_mode(args, cfg, tpl, params, mode="batched",
+                   chunk=args.prefill_chunk)
+    for r in (seq, bat):
+        print(f"[soak] {r['mode']:>10}: launches={r['launches']} "
+              f"(prefill {r['prefill_launches']}, chunk {r['chunk_steps']}, "
+              f"decode {r['decode_steps']}) vtime={r['virtual_time']} "
+              f"tok/vs={r['tokens_per_vs']} ttft_p50={r['ttft_p50']} "
+              f"ttft_p99={r['ttft_p99']} wall={r['soak_s']}s")
+        print(f"[soak] {r['stats_line']}")
+
+    # parity: coalescing + chunking must never change a generated token
+    if seq["generated"] != bat["generated"]:
+        bad = [i for i in seq["generated"]
+               if seq["generated"][i] != bat["generated"].get(i)]
+        raise RuntimeError(
+            f"batched mode changed generated tokens for requests {bad[:5]}")
+    print(f"[soak] parity OK: {len(seq['generated'])} requests byte-identical "
+          "across modes")
+
+    if args.write_baseline:
+        row = {"bench": "scheduler_soak_baseline", **knobs,
+               **{k: seq[k] for k in
+                  ("prefill_launches", "launches", "virtual_time",
+                   "tokens", "tokens_per_vs", "ttft_p50", "ttft_p99")}}
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(row, f, indent=1)
+            f.write("\n")
+        print(f"[soak] sequential baseline written to {args.baseline}")
+        return row
+
+    # the batched run must beat the sequential one on the same trace
+    assert bat["prefill_launches"] < seq["prefill_launches"], (
+        f"no launch saving: batched {bat['prefill_launches']} vs "
+        f"sequential {seq['prefill_launches']}")
+    assert bat["tokens_per_vs"] > seq["tokens_per_vs"], (
+        f"no virtual-throughput win: batched {bat['tokens_per_vs']} vs "
+        f"sequential {seq['tokens_per_vs']} tok/vs")
+    assert bat["ttft_p99"] <= seq["ttft_p99"], (
+        f"p99 TTFT regressed: batched {bat['ttft_p99']} vs "
+        f"sequential {seq['ttft_p99']}")
+    print("[soak] batched beats sequential: "
+          f"launches {seq['launches']}->{bat['launches']}, "
+          f"tok/vs {seq['tokens_per_vs']}->{bat['tokens_per_vs']}, "
+          f"ttft_p99 {seq['ttft_p99']}->{bat['ttft_p99']}")
+
+    # ... and the stored PR 4 baseline, when the knobs match
+    if args.baseline and os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            base = json.load(f)
+        if all(base.get(k) == knobs[k] for k in BASELINE_KEYS):
+            assert bat["tokens_per_vs"] > base["tokens_per_vs"], (
+                f"batched {bat['tokens_per_vs']} tok/vs does not beat stored "
+                f"baseline {base['tokens_per_vs']}")
+            assert bat["ttft_p99"] <= base["ttft_p99"], (
+                f"batched ttft_p99 {bat['ttft_p99']} worse than stored "
+                f"baseline {base['ttft_p99']}")
+            print(f"[soak] beats stored baseline {args.baseline}: "
+                  f"tok/vs {base['tokens_per_vs']}->{bat['tokens_per_vs']}, "
+                  f"ttft_p99 {base['ttft_p99']}->{bat['ttft_p99']}")
+        else:
+            print(f"[soak] stored baseline knobs differ; comparison skipped")
 
     after = plan_store_stats()
     new_misses = after["misses"] - before["misses"]
     row = {
         "bench": "scheduler_soak",
-        "arch": cfg.name,
-        "backend": args.backend,
-        "requests": args.requests,
-        "slots": args.slots,
-        "ladder": list(LADDER),
-        "warmup_s": round(warm_s, 2),
-        "soak_s": round(soak_s, 2),
-        "virtual_time": round(sched.clock.now(), 2),
+        **knobs,
         "new_dse_misses": new_misses,
         "warm_started_entries": loaded,
-        **stats,
+        "sequential": {k: v for k, v in seq.items()
+                       if k not in ("generated", "stats", "stats_line")},
+        "batched": {k: v for k, v in bat.items()
+                    if k not in ("generated", "stats", "stats_line")},
+        **{k: v for k, v in bat["stats"].items() if k != "counters"},
     }
-    print(json.dumps({k: v for k, v in row.items() if k != "counters"}))
-    print(f"[soak] {sched.stats_line()}")
+    print(json.dumps({k: v for k, v in row.items()
+                      if k not in ("sequential", "batched", "buckets")}))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(row, f, indent=1)
             f.write("\n")
-        print(f"[soak] per-bucket stats written to {args.out}")
-    if sched.counters["completed"] != args.requests:
-        raise RuntimeError(
-            f"soak incomplete: {sched.counters['completed']}/{args.requests} "
-            "requests completed"
-        )
+        print(f"[soak] comparison stats written to {args.out}")
     if os.environ.get("REPRO_PLAN_ASSERT_WARM") == "1":
         if not loaded:
             raise RuntimeError("ASSERT_WARM set but no plan store was loaded")

@@ -70,6 +70,7 @@ __all__ = [
     "ConvPlan",
     "GemmPlan",
     "Engine",
+    "batch_rungs",
     "bucket_for",
     "default_plan_store_path",
     "validate_policy",
@@ -99,6 +100,26 @@ def bucket_for(length: int, ladder: Sequence[int]) -> Optional[int]:
         if rung >= length and (best is None or rung < best):
             best = rung
     return best
+
+
+def batch_rungs(slots: int) -> tuple:
+    """Batch-size ladder for coalesced (B, L) prefill launches.
+
+    Powers of two up to ``slots`` plus ``slots`` itself: a tick's pending
+    prefills for one bucket rung are padded up to the smallest batch rung
+    >= their count, so the engine sees |batch_rungs| x |ladder| prefill GEMM
+    shapes total — each planned and traced once at warmup — instead of a
+    fresh shape per admission-count.
+    """
+    if slots < 1:
+        raise ValueError(f"slots must be >= 1, got {slots}")
+    rungs = set()
+    b = 1
+    while b < slots:
+        rungs.add(b)
+        b *= 2
+    rungs.add(slots)
+    return tuple(sorted(rungs))
 
 
 # ---------------------------------------------------------------------------
@@ -719,18 +740,24 @@ class Engine:
         return GemmPlan(m=m, n=n, k=k, block=block, logical=logical)
 
     def plan_gemm_ladder(
-        self, ladder: Sequence[int], n: int, k: int, *, mesh=None, partition=None
+        self, ladder: Sequence[int], n: int, k: int, *, batches: Sequence[int] = (1,),
+        mesh=None, partition=None
     ) -> dict:
-        """Plan one GEMM per bucket-ladder rung (M = rung, fixed N/K).
+        """Plan one GEMM per (batch rung x bucket-ladder rung) product
+        (M = batch * rung, fixed N/K).
 
         This is the scheduler's warmup primitive: planning every rung up
         front guarantees each bucket's shape is in the PlanRegistry before
         traffic arrives, so a mixed trace replayed against the warm registry
-        (or a persisted store) reports ``misses == 0``.
+        (or a persisted store) reports ``misses == 0``.  ``batches`` extends
+        the ladder to coalesced (B, L) prefill launches, whose GEMMs flatten
+        the leading dims into M = B * L (:func:`batch_rungs`); the default
+        (1,) is the plain per-rung ladder.
         """
+        ms = sorted({int(b) * int(m) for b in batches for m in ladder})
         return {
-            int(m): self.plan_gemm(int(m), n, k, mesh=mesh, partition=partition)
-            for m in sorted(set(ladder))
+            m: self.plan_gemm(m, n, k, mesh=mesh, partition=partition)
+            for m in ms
         }
 
     def plan_conv(

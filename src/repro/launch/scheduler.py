@@ -11,13 +11,29 @@ DESIGN.md §7):
   causal attention the padding cannot influence logits at real positions, so
   a bucket costs only wasted FLOPs, never accuracy; each rung is one fixed
   prefill shape, planned once (warmup) and a registry hit forever after.
+* **Coalesced (B, L) bucket prefill** — a tick's pending prefills for one
+  rung are stacked into ONE batched launch (per-row `last_pos` vectors,
+  batch padded up to a power-of-two batch rung, `engine.batch_rungs`), then
+  scattered row-by-row into the slot-indexed KV cache
+  (`transformer.insert_cache_rows`).  Prefill launches per tick are bounded
+  by the number of *occupied rungs*, never the number of admissions.
+* **Chunked prefill / decode interleaving** — with ``prefill_chunk > 0``,
+  prompts longer than one chunk stream into their slot chunk by chunk
+  (`transformer.prefill_chunk_step`, one fixed (slots, chunk) launch per
+  tick) interleaved with the batched decode step, so one long prompt no
+  longer stalls time-to-first-token for every resident session.
 * **Slot-indexed continuous batching** — decode requests from different
   sessions are coalesced into ONE batched decode step against a slot-indexed
   KV cache (`models/transformer.py:init_cache(per_slot=True)`): every batch
-  row is an independent session at its own position t[b].  Slots are
-  allocated on admission (`insert_cache_slot`), freed on EOS/length
+  row is an independent session at its own position t[b] (t[b] < 0 gates a
+  lane off entirely).  Slots are allocated on admission, freed on EOS/length
   completion, and reused by later requests — the decode GEMM shape is the
   constant (slots, ...) regardless of traffic mix.
+* **Sampled decode lanes** — greedy argmax by default; a
+  :class:`SamplingParams` with temperature > 0 draws each token from a
+  per-slot RNG lane, `fold_in(fold_in(PRNGKey(seed), slot), position)`, so a
+  request's stream depends only on (seed, slot, position) — byte-reproducible
+  per seed under the VirtualClock regardless of batch composition.
 * **Injectable clock + event loop** — the scheduler never reads wall time
   directly; it takes a :class:`SystemClock` in production
   (``serve.py --scheduler``) and a :class:`VirtualClock` in tests, so the
@@ -25,10 +41,10 @@ DESIGN.md §7):
   scripted arrival traces with no sleeps (`tests/test_scheduler.py`).
 
 Also here: :func:`compiled_steps`, the per-(template, config, cache_len)
-memo of jitted prefill/decode closures.  `serve.generate` used to rebuild
-its `jax.jit` wrappers on every call — every call retraced; the memo is
-shared by the scheduler and `generate`, with `TRACE_COUNTS` exposing actual
-trace counts for regression tests.
+memo of jitted prefill/decode/chunk closures.  `serve.generate` used to
+rebuild its `jax.jit` wrappers on every call — every call retraced; the memo
+is shared by the scheduler and `generate`, with `TRACE_COUNTS` exposing
+actual trace counts for regression tests.
 """
 from __future__ import annotations
 
@@ -36,26 +52,34 @@ import collections
 import dataclasses
 import itertools
 import time
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import bucket_for, register_plan_store, validate_policy
+from repro.core.engine import (
+    batch_rungs,
+    bucket_for,
+    register_plan_store,
+    validate_policy,
+)
 from repro.core.quantization import NumericsPolicy
 from repro.core.template import Template, default_template
 from repro.models import transformer as T
 
 __all__ = [
     "Request",
+    "SamplingParams",
     "SchedulerConfig",
     "ServeScheduler",
+    "StepFns",
     "SystemClock",
     "VirtualClock",
     "TRACE_COUNTS",
     "compiled_steps",
     "replay_trace",
+    "sampler_fn",
     "synthetic_trace",
 ]
 
@@ -100,24 +124,36 @@ TRACE_COUNTS: collections.Counter = collections.Counter()
 
 _STEP_FNS: dict = {}
 #: LRU bound: generate()'s default cache_len is s+gen, so prompt-length
-#: diversity would otherwise pin one executable pair per distinct length
+#: diversity would otherwise pin one executable triple per distinct length
 #: forever in a long-lived process.
 _STEP_FNS_MAX = 64
+_SAMPLE_FNS: dict = {}
 # cleared together with the plan caches so reset_plan_caches() drops the
 # compiled closures too (they capture Templates whose plans just vanished)
 register_plan_store(_STEP_FNS)
+register_plan_store(_SAMPLE_FNS)
 register_plan_store(TRACE_COUNTS)
 
 
-def compiled_steps(tpl: Template, cfg, cache_len: int,
-                   policy: Optional[NumericsPolicy] = None):
-    """The memoized (prefill_fn, decode_fn) pair for one serving setup.
+class StepFns(NamedTuple):
+    """The jitted serving closures of one (template, config, cache_len,
+    policy) setup.  Indexable like the old (prefill, decode) pair."""
 
-    prefill_fn(params, tokens, ctx, last_pos) -> (logits (B,V), cache)
-    decode_fn(params, token, t, cache)        -> (logits (B,V), cache')
+    prefill: object  # (params, tokens (B,L), ctx, last_pos) -> (logits, cache)
+    decode: object   # (params, token (B,1), t, cache) -> (logits, cache')
+    chunk: object    # (params, tokens (B,S), t, n_valid, cache) -> (logits, cache')
+
+
+def compiled_steps(tpl: Template, cfg, cache_len: int,
+                   policy: Optional[NumericsPolicy] = None) -> StepFns:
+    """The memoized :class:`StepFns` triple for one serving setup.
+
+    prefill(params, tokens, ctx, last_pos)   -> (logits (B,V), cache)
+    decode(params, token, t, cache)          -> (logits (B,V), cache')
+    chunk(params, tokens, t, n_valid, cache) -> (logits (B,V), cache')
 
     Keyed by (template, config, cache_len, numerics policy): repeated
-    `generate()` calls and every scheduler step reuse one pair of jitted
+    `generate()` calls and every scheduler step reuse one triple of jitted
     callables, so jax's own compilation cache applies — distinct *shapes*
     still trace once each (that is the bucket ladder's job to bound), but a
     repeated shape never retraces.  A quantized policy closure expects the
@@ -140,14 +176,79 @@ def compiled_steps(tpl: Template, cfg, cache_len: int,
             return T.decode_step(tpl, cfg, params, token, t, cache,
                                  policy=policy)
 
-        # the input cache dies the moment a decode step returns — donate it
-        # so XLA aliases the (slots, Hkv, C, D) ring buffers in place instead
-        # of copying the whole KV cache per generated token
-        fns = (jax.jit(_prefill), jax.jit(_decode, donate_argnums=(3,)))
+        def _chunk(params, tokens, t, n_valid, cache):
+            TRACE_COUNTS["chunk", cfg.name, int(cache_len)] += 1
+            return T.prefill_chunk_step(tpl, cfg, params, tokens, t, n_valid,
+                                        cache, policy=policy)
+
+        # the input cache dies the moment a decode/chunk step returns —
+        # donate it so XLA aliases the (slots, Hkv, C, D) ring buffers in
+        # place instead of copying the whole KV cache per generated token
+        fns = StepFns(
+            jax.jit(_prefill),
+            jax.jit(_decode, donate_argnums=(3,)),
+            jax.jit(_chunk, donate_argnums=(4,)),
+        )
         while len(_STEP_FNS) >= _STEP_FNS_MAX:
             _STEP_FNS.pop(next(iter(_STEP_FNS)))
     _STEP_FNS[key] = fns  # (re-)insert at the LRU tail
     return fns
+
+
+# ---------------------------------------------------------------------------
+# sampling (per-slot RNG lanes)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Decode-time sampling policy.  temperature <= 0 is exact greedy argmax
+    (the byte-parity mode); temperature > 0 samples from the softmax, with
+    ``top_k > 0`` restricting to the k highest logits first.  ``seed`` roots
+    every RNG lane: token draws are keyed (seed, lane, position) only."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def sampler_fn(temperature: float, top_k: int):
+    """The memoized jitted sampler for one (temperature, top_k) setting.
+
+    sample(logits (B,V), seed, lanes (B,), positions (B,)) -> tokens (B,)
+
+    Row b draws from `fold_in(fold_in(PRNGKey(seed), lanes[b]),
+    positions[b])` — an independent counter-mode stream per (lane, position),
+    so a draw never depends on which other rows share the batch.  The
+    scheduler uses lane = slot id; `generate` uses lane = batch row.
+    """
+    if temperature <= 0.0:
+        raise ValueError("greedy sampling is argmax, not a sampler_fn")
+    key = (float(temperature), int(top_k))
+    fn = _SAMPLE_FNS.get(key)
+    if fn is None:
+        def _sample(logits, seed, lanes, positions):
+            TRACE_COUNTS["sample", f"T{temperature}/k{top_k}",
+                         int(logits.shape[0])] += 1
+            scaled = logits.astype(jnp.float32) / jnp.float32(temperature)
+            if 0 < top_k < logits.shape[-1]:
+                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            base = jax.random.PRNGKey(seed)
+
+            def draw(row, lane, pos):
+                k = jax.random.fold_in(jax.random.fold_in(base, lane), pos)
+                return jax.random.categorical(k, row)
+
+            return jax.vmap(draw)(scaled, lanes, positions)
+
+        fn = jax.jit(_sample)
+        _SAMPLE_FNS[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -173,8 +274,11 @@ class Request:
     slot: Optional[int] = None
     generated: list = dataclasses.field(default_factory=list)
     t_next: int = 0
+    prefilled: int = 0  # prompt positions already written to the cache
+    prefill_target: int = 0  # positions a (re-)prefill must cover
     submitted_at: float = 0.0
     admitted_at: float = 0.0
+    first_token_at: float = -1.0
     completed_at: float = 0.0
     preemptions: int = 0
     slot_history: list = dataclasses.field(default_factory=list)
@@ -203,6 +307,13 @@ class SchedulerConfig:
     #: preempt the most recently admitted active request once the queue head
     #: has waited this long with no free slot (None = never preempt)
     preempt_after: Optional[float] = None
+    #: > 0 streams prompts longer than this into their slot in fixed-width
+    #: chunks (one (slots, prefill_chunk) launch per tick, interleaved with
+    #: decode) instead of one whole-bucket prefill; 0 disables chunking
+    prefill_chunk: int = 0
+    #: "batched" coalesces a rung's pending prefills into one (B, L) launch;
+    #: "sequential" is the one-(1, L)-launch-per-admission baseline
+    prefill_mode: str = "batched"
 
     def resolved_cache_len(self) -> int:
         return self.cache_len or (max(self.ladder) + self.max_new_limit)
@@ -214,8 +325,9 @@ class SchedulerConfig:
 
 
 class ServeScheduler:
-    """Continuous-batching scheduler: FIFO queue, bucketed prefill, one
-    coalesced decode step per tick over a slot-indexed KV cache.
+    """Continuous-batching scheduler: FIFO queue, one coalesced (B, L)
+    prefill launch per bucket rung per tick, chunked long-prompt streaming,
+    one coalesced decode step per tick over a slot-indexed KV cache.
 
     Padding a prompt is only sound for attention mixers (pad keys are masked
     out; recurrent/SSM states would absorb the pad tokens), so admission is
@@ -224,7 +336,8 @@ class ServeScheduler:
 
     def __init__(self, cfg, params, *, sched: Optional[SchedulerConfig] = None,
                  tpl: Optional[Template] = None, clock=None,
-                 policy: Optional[NumericsPolicy] = None) -> None:
+                 policy: Optional[NumericsPolicy] = None,
+                 sampling: Optional[SamplingParams] = None) -> None:
         pattern = T.plan_pattern(cfg)
         # "local" with a real window is also unsound: its ring cache is only
         # window-sized, so a bucket-padded prefill longer than the window
@@ -243,6 +356,7 @@ class ServeScheduler:
         self.tpl = tpl or default_template()
         self.sched = sched or SchedulerConfig()
         self.clock = clock or SystemClock()
+        self.sampling = sampling or SamplingParams()
         # backend/policy combos are rejected up front with a clear error
         # (q16 policy on a float backend, quantized non-dense families, ...)
         # instead of silently serving the wrong numerics
@@ -255,19 +369,39 @@ class ServeScheduler:
         self.cache_len = self.sched.resolved_cache_len()
         if max(self.sched.ladder) > self.cache_len:
             raise ValueError("cache_len smaller than the largest bucket")
+        if self.sched.prefill_mode not in ("batched", "sequential"):
+            raise ValueError(f"unknown prefill_mode {self.sched.prefill_mode!r}")
+        if self.sched.prefill_chunk < 0 or self.sched.prefill_chunk > self.cache_len:
+            raise ValueError(
+                f"prefill_chunk {self.sched.prefill_chunk} must be in "
+                f"[0, cache_len={self.cache_len}]")
         self.engine = self.tpl.engine
         self.registry = self.engine.plan_cache
-        self._prefill, self._decode = compiled_steps(self.tpl, cfg,
-                                                     self.cache_len, self.policy)
+        fns = compiled_steps(self.tpl, cfg, self.cache_len, self.policy)
+        self._prefill, self._decode, self._chunk = fns
+        self._sampler = (
+            None if self.sampling.greedy
+            else sampler_fn(self.sampling.temperature, self.sampling.top_k)
+        )
+        #: batch sizes a coalesced prefill launch is padded up to — the
+        #: (|batch_rungs| x |ladder|) product is the whole prefill shape set
+        self._batch_rungs = (
+            (1,) if self.sched.prefill_mode == "sequential"
+            else batch_rungs(self.sched.slots)
+        )
 
-        # compiled slot insertion (one trace per slot index — cache shapes
-        # are bucket-independent); the old batched cache is dead afterwards
-        # and aliases the output 1:1, so donate it (the batch-1 prefill row
-        # cannot alias — its shapes differ from every output)
-        def _ins(cache, row_cache, valid_len, slot):
-            return T.insert_cache_slot(cache, slot, row_cache, valid_len=valid_len)
+        # compiled cache maintenance (no GEMMs — memory ops, not launches);
+        # the old batched cache is dead afterwards and aliases the output
+        # 1:1, so donate it
+        def _ins(cache, rows_cache, src_rows, sel, valid_lens):
+            return T.insert_cache_rows(cache, rows_cache, src_rows=src_rows,
+                                       sel=sel, valid_lens=valid_lens)
 
-        self._insert = jax.jit(_ins, static_argnums=(3,), donate_argnums=(0,))
+        def _clr(cache, sel):
+            return T.clear_cache_rows(cache, sel)
+
+        self._insert_rows = jax.jit(_ins, donate_argnums=(0,))
+        self._clear_rows = jax.jit(_clr, donate_argnums=(0,))
 
         self.queue: collections.deque = collections.deque()
         self.active: dict = {}  # slot -> Request
@@ -275,8 +409,8 @@ class ServeScheduler:
         self.cache = None  # batched slot-indexed cache, built on first admit
         self.counters: collections.Counter = collections.Counter()
         self.bucket_stats: dict = {
-            int(b): {"admitted": 0, "prefills": 0, "occupancy": 0,
-                     "hits": 0, "misses": 0}
+            int(b): {"admitted": 0, "prefills": 0, "launches": 0,
+                     "occupancy": 0, "hits": 0, "misses": 0}
             for b in sorted(self.sched.ladder)
         }
         self.history: list = []
@@ -285,20 +419,35 @@ class ServeScheduler:
     # -- warmup --------------------------------------------------------------
 
     def warmup(self) -> dict:
-        """Trace every bucket's prefill and the coalesced decode step once.
+        """Trace every (batch rung x bucket) prefill, the chunk step, and the
+        coalesced decode step once.
 
         All plan work (DSE lookups happen at trace time) lands here, scoped
         per bucket — after warmup a mixed trace replays with ``misses == 0``
-        against the warm registry.  Returns the per-bucket hit/miss deltas.
+        against the warm registry: a coalesced (B, L) launch flattens its
+        leading dims into GEMM M = B*L, so every batch-rung product must be
+        planned up front, not just the per-rung shapes.  Returns the
+        per-bucket hit/miss deltas.
         """
         for b in sorted(self.sched.ladder):
-            toks = jnp.zeros((1, b), jnp.int32)
-            with self.registry.scope(into=self.bucket_stats[b]):
-                jax.block_until_ready(
-                    self._prefill(self.exec_params, toks, None, jnp.int32(b - 1))[0]
-                )
+            for nb in self._batch_rungs:
+                toks = jnp.zeros((nb, b), jnp.int32)
+                last = jnp.full((nb,), b - 1, jnp.int32)
+                with self.registry.scope(into=self.bucket_stats[b]):
+                    jax.block_until_ready(
+                        self._prefill(self.exec_params, toks, None, last)[0]
+                    )
         cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
                              dtype=self.cache_dtype, per_slot=True)
+        if self.sched.prefill_chunk:
+            ck = self.sched.prefill_chunk
+            tok = jnp.zeros((self.sched.slots, ck), jnp.int32)
+            t0 = jnp.full((self.sched.slots,), -1, jnp.int32)
+            nv = jnp.zeros((self.sched.slots,), jnp.int32)
+            with self.registry.scope() as chunk_delta:
+                _, cache = self._chunk(self.exec_params, tok, t0, nv, cache)
+                jax.block_until_ready(cache)
+            self.counters["warmup_chunk_misses"] += chunk_delta["misses"]
         tok = jnp.zeros((self.sched.slots, 1), jnp.int32)
         tvec = jnp.zeros((self.sched.slots,), jnp.int32)
         with self.registry.scope() as decode_delta:
@@ -345,46 +494,6 @@ class ServeScheduler:
         self.counters["completed"] += 1
         self.results[req.rid] = req
 
-    def _admit(self, req: Request) -> None:
-        slot = self._free.pop(0)
-        req.slot = slot
-        req.slot_history.append(slot)
-        req.state = "active"
-        req.admitted_at = self.clock.now()
-        self.counters["admitted"] += 1
-
-        s_total = req.seq_len
-        bucket = bucket_for(s_total, self.sched.ladder)
-        req.bucket = bucket
-        bstats = self.bucket_stats[bucket]
-        bstats["admitted"] += 1
-        bstats["prefills"] += 1
-        self.counters["prefills"] += 1
-
-        tokens = np.zeros((1, bucket), np.int32)  # right-pad up to the rung
-        tokens[0, :s_total] = np.asarray(
-            list(req.prompt) + list(req.generated), np.int32
-        )
-        with self.registry.scope(into=bstats):
-            logits, row_cache = self._prefill(
-                self.exec_params, jnp.asarray(tokens), None, jnp.int32(s_total - 1)
-            )
-        tok = int(jnp.argmax(logits[0]))
-        req.generated.append(tok)
-        self.counters["tokens"] += 1
-        if req.eos_id is not None and tok == req.eos_id:
-            self._complete(req, "eos")
-            return
-        if req.remaining <= 0:
-            self._complete(req, "length")
-            return
-        if self.cache is None:
-            self.cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                                      dtype=self.cache_dtype, per_slot=True)
-        self.cache = self._insert(self.cache, row_cache, jnp.int32(s_total), slot)
-        req.t_next = s_total
-        self.active[slot] = req
-
     def _preempt_if_starving(self, now: float) -> Optional[Request]:
         pa = self.sched.preempt_after
         if pa is None or not self.queue or self._free or not self.active:
@@ -405,55 +514,220 @@ class ServeScheduler:
                 req.slot = None
                 req.state = "queued"
                 req.preemptions += 1
+                req.prefilled = 0
+                req.prefill_target = 0
                 req.submitted_at = now  # waits its turn afresh
                 self.counters["preempted"] += 1
                 return req
         return None
 
+    def _pick_tokens(self, logits, lanes, positions) -> np.ndarray:
+        """Next token per row of a (B, V) logits batch: exact argmax when
+        greedy, else one draw per RNG lane (lane = slot id, position = the
+        absolute position the drawn token will occupy)."""
+        if self.sampling.greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        return np.asarray(self._sampler(
+            logits, jnp.uint32(self.sampling.seed),
+            jnp.asarray(lanes, jnp.int32), jnp.asarray(positions, jnp.int32),
+        ))
+
+    def _emit_first(self, req: Request, tok: int, event: dict) -> None:
+        """Record a request's first generated token (prefill completion)."""
+        req.generated.append(int(tok))
+        req.first_token_at = self.clock.now()
+        self.counters["tokens"] += 1
+        if req.eos_id is not None and int(tok) == req.eos_id:
+            self._complete(req, "eos")
+            event["completed"].append((req.rid, "eos"))
+        elif req.remaining <= 0:
+            self._complete(req, "length")
+            event["completed"].append((req.rid, "length"))
+        else:
+            req.t_next = req.prefill_target
+
+    def _launch_prefill(self, bucket: int, group: list, event: dict) -> None:
+        """ONE coalesced (B, bucket) prefill launch for a rung's admissions:
+        batch padded up to the smallest batch rung >= |group| (pad rows are
+        zero prompts whose outputs are discarded), logits read at each row's
+        real last token, surviving rows scattered into their cache slots."""
+        bstats = self.bucket_stats[bucket]
+        nreal = len(group)
+        npad = next(nb for nb in self._batch_rungs if nb >= nreal)
+        tokens = np.zeros((npad, bucket), np.int32)  # right-pad up to the rung
+        last = np.zeros((npad,), np.int32)
+        for i, r in enumerate(group):
+            seq = list(r.prompt) + list(r.generated)
+            tokens[i, : len(seq)] = seq
+            last[i] = len(seq) - 1
+        with self.registry.scope(into=bstats):
+            logits, rows_cache = self._prefill(
+                self.exec_params, jnp.asarray(tokens), None, jnp.asarray(last)
+            )
+        bstats["admitted"] += nreal
+        bstats["prefills"] += nreal
+        bstats["launches"] += 1
+        self.counters["prefills"] += nreal
+        self.counters["prefill_launches"] += 1
+        self.counters["prefill_rows"] += nreal
+        event["prefill_launches"] += 1
+        event["prefill_rows"] += nreal
+        event["launches"] += 1
+
+        lanes = np.zeros((npad,), np.int32)
+        posv = np.zeros((npad,), np.int32)
+        for i, r in enumerate(group):
+            lanes[i] = r.slot
+            posv[i] = r.prefill_target
+        toks = self._pick_tokens(logits, lanes, posv)
+        sel = np.zeros((self.sched.slots,), bool)
+        src = np.zeros((self.sched.slots,), np.int32)
+        vlen = np.ones((self.sched.slots,), np.int32)
+        for i, r in enumerate(group):
+            r.prefilled = r.prefill_target
+            self._emit_first(r, int(toks[i]), event)
+            if r.state == "active":  # not instantly eos/length-completed
+                sel[r.slot] = True
+                src[r.slot] = i
+                vlen[r.slot] = r.prefill_target
+        if sel.any():
+            self.cache = self._insert_rows(
+                self.cache, rows_cache, jnp.asarray(src), jnp.asarray(sel),
+                jnp.asarray(vlen),
+            )
+
     # -- the event loop body -------------------------------------------------
 
-    def step(self) -> bool:
+    def step(self):
         """One scheduler tick: (maybe) preempt, admit FIFO, one coalesced
-        decode step over all active slots.  Returns whether any work ran."""
+        prefill launch per occupied bucket rung, one chunk launch for
+        mid-prefill slots, one coalesced decode step over decoding slots.
+        Returns the tick's event dict when any work ran, else False.  The
+        event's ``launches`` counts compute launches only (prefill + chunk +
+        decode; cache scatter/clear are memory ops) — the unit of the
+        virtual-time cost model in :func:`replay_trace`."""
         now = self.clock.now()
         event = {"now": now, "admitted": [], "completed": [], "preempted": [],
-                 "decoded": 0}
+                 "decoded": 0, "prefill_launches": 0, "prefill_rows": 0,
+                 "chunk_rows": 0, "launches": 0}
 
         victim = self._preempt_if_starving(now)
 
+        admitted = []
         while self._free and self.queue:
             req = self.queue.popleft()
-            self._admit(req)
+            slot = self._free.pop(0)
+            req.slot = slot
+            req.slot_history.append(slot)
+            req.state = "active"
+            req.admitted_at = now
+            req.bucket = bucket_for(req.seq_len, self.sched.ladder)
+            req.prefill_target = req.seq_len
+            req.prefilled = 0
+            self.active[slot] = req
+            self.counters["admitted"] += 1
+            admitted.append(req)
             event["admitted"].append(req.rid)
-            if req.state == "completed":
-                event["completed"].append((req.rid, req.finish_reason))
         if victim is not None:
             self.queue.appendleft(victim)
             event["preempted"].append(victim.rid)
 
-        if self.active:
+        if admitted and self.cache is None:
+            self.cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
+                                      dtype=self.cache_dtype, per_slot=True)
+
+        ck = self.sched.prefill_chunk
+        whole = [r for r in admitted if not ck or r.prefill_target <= ck]
+        chunked = [r for r in admitted if ck and r.prefill_target > ck]
+
+        # ONE coalesced launch per rung with pending whole-prompt prefills
+        # (sequential mode degrades to one launch per admission — the PR 4
+        # baseline, kept for A/B soak comparisons)
+        by_bucket: dict = {}
+        for r in whole:
+            by_bucket.setdefault(r.bucket, []).append(r)
+        for bucket in sorted(by_bucket):
+            grp = by_bucket[bucket]
+            if self.sched.prefill_mode == "sequential":
+                for r in grp:
+                    self._launch_prefill(bucket, [r], event)
+            else:
+                self._launch_prefill(bucket, grp, event)
+
+        # chunk-admitted slots inherit stale ring entries from their previous
+        # occupant — invalidate before the first chunk lands
+        if chunked:
+            sel = np.zeros((self.sched.slots,), bool)
+            for r in chunked:
+                sel[r.slot] = True
+            self.cache = self._clear_rows(self.cache, jnp.asarray(sel))
+
+        # ONE fixed-shape chunk launch streams every mid-prefill slot forward
+        pending = [r for r in self.active.values()
+                   if r.prefilled < r.prefill_target]
+        if pending:
+            slots = self.sched.slots
+            tok = np.zeros((slots, ck), np.int32)
+            t0 = np.full((slots,), -1, np.int32)
+            nv = np.zeros((slots,), np.int32)
+            for r in pending:
+                seq = list(r.prompt) + list(r.generated)
+                n = min(ck, r.prefill_target - r.prefilled)
+                tok[r.slot, :n] = seq[r.prefilled: r.prefilled + n]
+                t0[r.slot] = r.prefilled
+                nv[r.slot] = n
+            logits, self.cache = self._chunk(
+                self.exec_params, jnp.asarray(tok), jnp.asarray(t0),
+                jnp.asarray(nv), self.cache,
+            )
+            self.counters["chunk_steps"] += 1
+            event["chunk_rows"] = len(pending)
+            event["launches"] += 1
+            finishers = []
+            for r in pending:
+                r.prefilled += int(nv[r.slot])
+                if r.prefilled >= r.prefill_target:
+                    finishers.append(r)
+            if finishers:
+                lanes = np.arange(slots, dtype=np.int32)
+                posv = np.zeros((slots,), np.int32)
+                for r in finishers:
+                    posv[r.slot] = r.prefill_target
+                toks = self._pick_tokens(logits, lanes, posv)
+                for r in finishers:
+                    self._emit_first(r, int(toks[r.slot]), event)
+
+        # ONE coalesced decode step over every decoding slot; mid-chunk and
+        # free lanes are gated off with t = -1 (their cache rows must not
+        # move — the write mask keeps them byte-identical)
+        decoding = {s: r for s, r in self.active.items()
+                    if r.prefilled >= r.prefill_target}
+        if decoding:
             slots = self.sched.slots
             tok = np.zeros((slots, 1), np.int32)
-            tvec = np.zeros((slots,), np.int32)
-            for slot, req in self.active.items():
+            tvec = np.full((slots,), -1, np.int32)
+            for slot, req in decoding.items():
                 tok[slot, 0] = req.generated[-1]
                 tvec[slot] = req.t_next
             logits, self.cache = self._decode(
                 self.exec_params, jnp.asarray(tok), jnp.asarray(tvec), self.cache
             )
-            next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+            lanes = np.arange(slots, dtype=np.int32)
+            posv = np.maximum(tvec + 1, 0)
+            next_tok = self._pick_tokens(logits, lanes, posv)
             self.counters["decode_steps"] += 1
-            self.counters["slot_steps"] += len(self.active)
-            event["decoded"] = len(self.active)
-            for slot in sorted(self.active):
-                req = self.active[slot]
+            self.counters["slot_steps"] += len(decoding)
+            event["decoded"] = len(decoding)
+            event["launches"] += 1
+            for slot in sorted(decoding):
+                req = decoding[slot]
                 self.bucket_stats[req.bucket]["occupancy"] += 1
                 t = int(next_tok[slot])
                 req.generated.append(t)
                 req.t_next += 1
                 self.counters["tokens"] += 1
-            for slot in sorted(self.active):
-                req = self.active[slot]
+            for slot in sorted(decoding):
+                req = decoding[slot]
                 if req.eos_id is not None and req.generated[-1] == req.eos_id:
                     self._complete(req, "eos")
                     event["completed"].append((req.rid, "eos"))
@@ -461,10 +735,12 @@ class ServeScheduler:
                     self._complete(req, "length")
                     event["completed"].append((req.rid, "length"))
 
-        worked = bool(event["admitted"] or event["decoded"] or event["preempted"])
-        if worked:
-            self.history.append(event)
-        return worked
+        worked = bool(event["admitted"] or event["decoded"]
+                      or event["preempted"] or event["launches"])
+        if not worked:
+            return False
+        self.history.append(event)
+        return event
 
     def drain(self, *, tick: float = 0.0, max_steps: int = 100_000) -> None:
         """Run the event loop until queue and slots are empty."""
@@ -477,12 +753,29 @@ class ServeScheduler:
 
     # -- reporting -----------------------------------------------------------
 
+    def _ttft(self) -> dict:
+        """Time-to-first-token percentiles over completed requests."""
+        waits = sorted(
+            r.first_token_at - r.submitted_at
+            for r in self.results.values() if r.first_token_at >= 0
+        )
+        out = {"n": len(waits)}
+        if waits:
+            arr = np.asarray(waits)
+            out["p50"] = float(np.percentile(arr, 50))
+            out["p99"] = float(np.percentile(arr, 99))
+            out["mean"] = float(arr.mean())
+        return out
+
     def stats(self) -> dict:
         c = self.counters
         reg = self.registry.stats()
         return {
             "counters": dict(c),
             "mean_occupancy": round(c["slot_steps"] / max(c["decode_steps"], 1), 3),
+            "prefill_coalescing": round(
+                c["prefill_rows"] / max(c["prefill_launches"], 1), 3),
+            "ttft": self._ttft(),
             "buckets": {b: dict(s) for b, s in self.bucket_stats.items()},
             "registry": reg,
         }
@@ -490,6 +783,8 @@ class ServeScheduler:
     def stats_line(self) -> str:
         c = self.counters
         occ = c["slot_steps"] / max(c["decode_steps"], 1)
+        coal = c["prefill_rows"] / max(c["prefill_launches"], 1)
+        ttft = self._ttft()
         per_bucket = " ".join(
             f"{b}:{s['admitted']}a/{s['occupancy']}o/{s['misses']}m"
             for b, s in sorted(self.bucket_stats.items())
@@ -498,8 +793,13 @@ class ServeScheduler:
             f"scheduler: submitted={c['submitted']} admitted={c['admitted']} "
             f"completed={c['completed']} rejected={c['rejected']} "
             f"preempted={c['preempted']} prefills={c['prefills']} "
+            f"prefill_launches={c['prefill_launches']} coalescing={coal:.2f} "
+            f"chunk_steps={c['chunk_steps']} "
             f"decode_steps={c['decode_steps']} tokens={c['tokens']} "
-            f"mean_occupancy={occ:.2f} | buckets[adm/occ/miss] {per_bucket}"
+            f"mean_occupancy={occ:.2f} "
+            f"ttft_p50={ttft.get('p50', 0.0):.3f} "
+            f"ttft_p99={ttft.get('p99', 0.0):.3f} | "
+            f"buckets[adm/occ/miss] {per_bucket}"
         )
 
 
@@ -509,7 +809,8 @@ class ServeScheduler:
 
 
 def replay_trace(sched: ServeScheduler, requests: Sequence[Request], *,
-                 tick: float = 1.0, max_steps: int = 100_000) -> dict:
+                 tick: float = 1.0, max_steps: int = 100_000,
+                 launch_cost: float = 0.0) -> dict:
     """Drive the scheduler from a scripted arrival trace.
 
     ``arrival`` times are offsets from the start of the replay (the injected
@@ -517,8 +818,12 @@ def replay_trace(sched: ServeScheduler, requests: Sequence[Request], *,
     time, a VirtualClock usually 0): submissions become due as the clock
     passes start + arrival; when the scheduler is idle the clock jumps
     (virtual) or the process sleeps (production clock) to the next arrival.
-    One `step()` per ``tick`` of clock time.  Returns `sched.stats()` once
-    everything drains.
+    One `step()` per ``tick`` of clock time; ``launch_cost > 0`` additionally
+    charges that much clock per compute launch the step issued (prefill,
+    chunk, decode — the event's ``launches``), so batching fewer launches
+    per tick measurably improves virtual-time TTFT/throughput, deterministic
+    and machine-independent.  Returns `sched.stats()` once everything
+    drains.
     """
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     pending = collections.deque(pending)
@@ -532,8 +837,9 @@ def replay_trace(sched: ServeScheduler, requests: Sequence[Request], *,
                 return sched.stats()
             sched.clock.sleep(pending[0].arrival - elapsed)
             continue
-        sched.step()
-        sched.clock.sleep(tick)
+        ev = sched.step()
+        n_launch = ev["launches"] if isinstance(ev, dict) else 0
+        sched.clock.sleep(tick + launch_cost * n_launch)
     raise RuntimeError(f"trace did not drain in {max_steps} steps")
 
 

@@ -22,62 +22,84 @@ from repro.core.template import default_template
 from repro.data.pipeline import synthetic_batch
 from repro.launch.scheduler import (
     Request,
+    SamplingParams,
     SchedulerConfig,
     ServeScheduler,
     SystemClock,
     compiled_steps,
     replay_trace,
+    sampler_fn,
 )
 from repro.models import transformer as T
 
 
 def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
-             greedy=True, tpl=None, policy=None):
+             greedy=True, tpl=None, policy=None, sampling=None):
     """Prefill + autoregressive decode.  tokens: (B, S) prompts.
 
     The jitted prefill/decode closures are hoisted into the
     `scheduler.compiled_steps` memo (keyed by template, config, cache_len,
     numerics policy): repeated calls — and the continuous-batching
-    scheduler, which shares the memo — reuse one pair of compiled callables
-    instead of retracing per call.
+    scheduler, which shares the memo — reuse one triple of compiled
+    callables instead of retracing per call.
 
     ``policy``: a quantized :class:`NumericsPolicy` runs the whole decode
     loop grid-resident (weights quantized once via the engine's qparam
     cache, int16 KV cache, float only at the designated islands).
+
+    ``sampling``: a :class:`SamplingParams` with temperature > 0 draws each
+    token from a per-row RNG lane (lane = batch row, position = the drawn
+    token's absolute position); None / temperature <= 0 is exact greedy.
     """
     tpl = tpl or default_template()
     if policy is not None and policy.quantized:
         params = T.quantize_params(tpl, cfg, params, policy)
     b, s = tokens.shape
     cache_len = cache_len or (s + gen)
-    prefill, decode = compiled_steps(tpl, cfg, cache_len, policy)
+    fns = compiled_steps(tpl, cfg, cache_len, policy)
+    prefill, decode = fns.prefill, fns.decode
+    sampled = sampling is not None and not sampling.greedy
+    smp = sampler_fn(sampling.temperature, sampling.top_k) if sampled else None
+    lanes = jnp.arange(b, dtype=jnp.int32)
+
+    def pick(logits, position):
+        if not sampled:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks = smp(logits, jnp.uint32(sampling.seed), lanes,
+                   jnp.full((b,), position, jnp.int32))
+        return toks[:, None].astype(jnp.int32)
 
     logits, cache = prefill(params, tokens, ctx, jnp.int32(s - 1))
     out = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    tok = pick(logits, s)
     out.append(tok)
     for i in range(gen - 1):
         logits, cache = decode(params, tok, jnp.int32(s + i), cache)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        tok = pick(logits, s + i + 1)
         out.append(tok)
     return jnp.concatenate(out, axis=1)
 
 
 def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
-                  gen: int, seed: int, clock=None, policy=None) -> ServeScheduler:
+                  gen: int, seed: int, clock=None, policy=None,
+                  sampling=None, prefill_chunk: int = 0) -> ServeScheduler:
     """Serve a mixed-length synthetic request set through the
     continuous-batching scheduler (the production path of DESIGN.md §7).
 
     ``policy`` threads the numerics policy into the scheduler's compiled
     steps — `--backend q16 --scheduler` serves a fully fixed-point decode
-    loop instead of silently ignoring the backend."""
+    loop instead of silently ignoring the backend.  ``sampling`` selects
+    greedy vs per-slot-lane sampled decode; ``prefill_chunk`` > 0 streams
+    long prompts in chunks interleaved with decode."""
     ladder = tuple(sorted({max(4, prompt_len // 2), prompt_len, 2 * prompt_len}))
     sched = ServeScheduler(
         cfg, params, tpl=tpl, clock=clock or SystemClock(), policy=policy,
+        sampling=sampling,
         # this path serves exactly `requests` requests, all arriving at t=0 —
         # the queue must hold the whole burst, rejection is not policy here
         sched=SchedulerConfig(ladder=ladder, slots=4, max_new_limit=max(gen, 1),
-                              max_queue=max(256, requests)),
+                              max_queue=max(256, requests),
+                              prefill_chunk=prefill_chunk),
     )
     sched.warmup()
     rng = np.random.default_rng(seed)
@@ -98,7 +120,19 @@ def main(argv=None):
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds the synthetic prompts AND the sampled-decode "
+                         "RNG lanes (reproducible per seed)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampled decode temperature; 0 = exact greedy "
+                         "argmax (the byte-parity default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampled decode to the k highest logits "
+                         "(0 = full softmax)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="with --scheduler: stream prompts longer than this "
+                         "into their slot in fixed-width chunks interleaved "
+                         "with decode (0 = whole-bucket prefill)")
     ap.add_argument("--scheduler", action="store_true",
                     help="serve through the continuous-batching scheduler "
                          "(mixed-length requests, bucketed prefill, coalesced "
@@ -137,12 +171,20 @@ def main(argv=None):
         else:
             print(f"[serve] numerics: q16 grid-resident, activations "
                   f"{policy.fmt.name} (calibrated), weights per-tensor")
+    sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                              seed=args.seed)
+    if not sampling.greedy:
+        print(f"[serve] sampling: temperature={sampling.temperature} "
+              f"top_k={sampling.top_k} seed={sampling.seed} "
+              f"(per-lane RNG, reproducible per seed)")
     t0 = time.time()
     if args.scheduler:
         try:
             sched = run_scheduler(cfg, params, tpl, requests=args.prompts,
                                   prompt_len=args.prompt_len, gen=args.gen,
-                                  seed=args.seed, policy=policy)
+                                  seed=args.seed, policy=policy,
+                                  sampling=sampling,
+                                  prefill_chunk=args.prefill_chunk)
         except ValueError as err:  # admission policy lives in ServeScheduler
             raise SystemExit(f"--scheduler: {err}") from err
         dt = time.time() - t0
@@ -165,7 +207,7 @@ def main(argv=None):
                 jax.random.PRNGKey(1), (args.prompts, cfg.n_image_tokens, cfg.d_model)
             ) * 0.1
         gen = generate(cfg, params, tokens, ctx, gen=args.gen, tpl=tpl,
-                       policy=policy)
+                       policy=policy, sampling=sampling)
         dt = time.time() - t0
         print(f"[serve] arch={cfg.name} backend={args.backend} batch={args.prompts} "
               f"prompt={args.prompt_len} generated={gen.shape[1]} tokens "

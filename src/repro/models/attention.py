@@ -18,7 +18,12 @@ Slot-indexed (continuous-batching) variant: with ``per_slot=True`` the pos
 vector is per-batch-row — (B, C) — and ``decode_attention`` accepts a
 *vector* position t: (B,), so every batch row can sit at a different decode
 position.  This is the cache layout the serve scheduler
-(`launch/scheduler.py`) coalesces independent sessions into.
+(`launch/scheduler.py`) coalesces independent sessions into.  The per-slot
+path additionally generalizes to a *block* of S tokens per row (chunked
+prefill: positions t[b]..t[b]+S-1) with per-row write gating — t[b] < 0
+marks an inactive lane whose cache row must not change, and ``n_valid``
+bounds how many of the S tokens are real (ragged final chunks) — so one
+fixed-shape launch serves any mix of chunking / decoding / idle slots.
 """
 from __future__ import annotations
 
@@ -449,6 +454,7 @@ def decode_attention(
     head_dim: Optional[int] = None,
     use_rope: Optional[bool] = None,
     policy: Optional[NumericsPolicy] = None,
+    n_valid: Optional[jax.Array] = None,
 ):
     """One decode step.  x: (B, 1, d); t: scalar int32 position, or — with a
     slot-indexed cache (pos: (B, C)) — a per-row position vector t: (B,).
@@ -456,6 +462,13 @@ def decode_attention(
     Self-attention (cross=False) appends the new kv at slot t % C and masks
     by stored positions; cross-attention reads a static cache (no update).
     Returns (out, new_cache).
+
+    The slot-indexed path also accepts a *block* x: (B, S, d) — row b covers
+    positions t[b]..t[b]+S-1 (chunked prefill).  Per-row gating: t[b] < 0
+    marks an inactive lane (cache row untouched, output garbage), and
+    ``n_valid``: (B,) limits writes to the first n_valid[b] of the S tokens
+    (ragged final chunk; None means all S are real).  Writes are
+    gather-select-scatter so gated-off lanes keep their bytes exactly.
 
     Under a quantized ``policy`` the projections are grid-resident and the
     ring cache holds int16 raws: the new v row is written straight off the
@@ -472,12 +485,12 @@ def decode_attention(
     )
     eng = tpl.engine
 
-    b = x.shape[0]
+    b, s = x.shape[0], x.shape[1]
     per_slot = (not cross) and cache["pos"].ndim == 2
     tpos = jnp.asarray(t, jnp.int32)
     if per_slot:
         tpos = jnp.broadcast_to(tpos.reshape(-1), (b,))  # scalar t -> every row
-        q_positions = tpos[:, None]  # (B, 1)
+        q_positions = tpos[:, None] + jnp.arange(s)[None, :]  # (B, S)
     else:
         tpos = tpos.reshape(())
         q_positions = tpos[None]  # (1,)
@@ -487,42 +500,64 @@ def decode_attention(
     if rope:
         q = apply_rope(q, q_positions, cfg.rope_theta)
 
+    mask = None
     if cross:
         k, v = cache["k"], cache["v"]  # (B,Hkv,T,D) static
         valid = cache["pos"] >= 0
         new_cache = cache
     else:
         c = cache["k"].shape[2]
-        slot = (tpos % c).astype(jnp.int32)
         kq = dense(tpl, p["wk"], xin)
         vq = dense(tpl, p["wv"], xin)
         if q16:
             # v never leaves the grid; k crosses only for the RoPE island
-            v_new = vq.reshape(b, 1, kvh, hd).raw
+            v_new = vq.reshape(b, s, kvh, hd).raw
             if rope:
                 k_new = apply_rope(
                     _split_heads(eng.dequant(kq), kvh), q_positions, cfg.rope_theta
                 )
                 k_new = eng.quant(k_new, policy.fmt).raw
             else:
-                k_new = kq.reshape(b, 1, kvh, hd).raw
+                k_new = kq.reshape(b, s, kvh, hd).raw
         else:
             k_new = _split_heads(kq, kvh)
             v_new = _split_heads(vq, kvh)
             if rope:
                 k_new = apply_rope(k_new, q_positions, cfg.rope_theta)
         if per_slot:
-            # each row writes its own ring slot: (b, :, slot[b]) scatter
-            rows = jnp.arange(b)
-            k = cache["k"].at[rows, :, slot].set(
-                k_new.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["k"].dtype)
+            # each row writes its own ring slots (qpos % C); gating must not
+            # disturb other lanes' bytes, so read-modify-write: gather the
+            # incumbent entries, select per write mask, scatter back.  Slot
+            # indices within a row are distinct (S <= C), so the scatter has
+            # no duplicate targets.
+            nv = (
+                jnp.full((b,), s, jnp.int32)
+                if n_valid is None
+                else jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1), (b,))
             )
-            v = cache["v"].at[rows, :, slot].set(
-                v_new.transpose(0, 2, 1, 3)[:, :, 0].astype(cache["v"].dtype)
+            write = (tpos >= 0)[:, None] & (jnp.arange(s)[None, :] < nv[:, None])
+            slots = (q_positions % c).astype(jnp.int32)  # (B, S), non-negative
+            rows = jnp.arange(b)[:, None]
+            old_k = cache["k"][rows, :, slots]  # (B,S,Hkv,D)
+            old_v = cache["v"][rows, :, slots]
+            old_pos = cache["pos"][rows, slots]  # (B,S)
+            wm = write[:, :, None, None]
+            k = cache["k"].at[rows, :, slots].set(
+                jnp.where(wm, k_new.astype(cache["k"].dtype), old_k)
             )
-            pos = cache["pos"].at[rows, slot].set(tpos)
-            tcol = tpos[:, None]  # (B, 1) against pos (B, C)
+            v = cache["v"].at[rows, :, slots].set(
+                jnp.where(wm, v_new.astype(cache["v"].dtype), old_v)
+            )
+            pos = cache["pos"].at[rows, slots].set(
+                jnp.where(write, q_positions, old_pos)
+            )
+            # causal block mask against the whole ring: (B, S, C)
+            valid = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_positions[:, :, None])
+            if window:
+                valid &= pos[:, None, :] > q_positions[:, :, None] - window
+            mask = valid[:, None]  # (B, 1, S, C)
         else:
+            slot = (tpos % c).astype(jnp.int32)
             k = jax.lax.dynamic_update_slice(
                 cache["k"], k_new.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
                 (0, 0, slot, 0),
@@ -532,22 +567,22 @@ def decode_attention(
                 (0, 0, slot, 0),
             )
             pos = jax.lax.dynamic_update_slice(cache["pos"], tpos[None], (slot,))
-            tcol = tpos
+            valid = (pos >= 0) & (pos <= tpos)
+            if window:
+                valid &= pos > tpos - window
         new_cache = {"k": k, "v": v, "pos": pos}
-        valid = (pos >= 0) & (pos <= tcol)
-        if window:
-            valid &= pos > tcol - window
 
-    if valid.ndim == 1:
-        valid = valid[None]
     if q16:
         # the int16 ring cache crosses into the softmax island here — the
         # only read of (B, Hkv, C, D) per step moves 2-byte, not 4-byte, rows
         k = eng.dequant(k, policy.fmt)
         v = eng.dequant(v, policy.fmt)
-    mask = jnp.broadcast_to(valid[:, None, None, :], (b, 1, 1, k.shape[2]))
+    if mask is None:
+        if valid.ndim == 1:
+            valid = valid[None]
+        mask = jnp.broadcast_to(valid[:, None, None, :], (b, 1, s, k.shape[2]))
     out = _sdpa_dense(q, k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), mask)
-    out = out.reshape(b, 1, h * hd)
+    out = out.reshape(b, s, h * hd)
     if q16:
         out = eng.dequant(dense(tpl, p["wo"], eng.quant(out, policy.fmt)))
     else:

@@ -70,10 +70,13 @@ __all__ = [
     "forward",
     "loss_fn",
     "prefill",
+    "prefill_chunk_step",
     "decode_step",
     "init_cache",
     "cache_axes",
     "insert_cache_slot",
+    "insert_cache_rows",
+    "clear_cache_rows",
 ]
 
 
@@ -346,7 +349,8 @@ def q16_island_counts(cfg, *, mode: str = "decode") -> dict:
 
 
 def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
-               cache=None, ctx=None, cache_len=0, t=None, policy=None):
+               cache=None, ctx=None, cache_len=0, t=None, policy=None,
+               n_valid=None):
     """Returns (h, new_cache_or_None, aux)."""
     newc = {}
     aux = jnp.zeros((), jnp.float32)
@@ -360,7 +364,7 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
         if mode == "decode":
             out, c = decode_attention(
                 tpl, p["attn"], a_in, cache["attn"], cfg=cfg, t=t, window=window,
-                policy=policy,
+                policy=policy, n_valid=n_valid,
             )
             newc["attn"] = c
         else:
@@ -448,7 +452,7 @@ def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
 
 def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
                cache=None, ctx=None, cache_len=0, t=None, remat=False,
-               policy=None):
+               policy=None, n_valid=None):
     """Scan the stacked groups + run tail layers.  Returns (h, cache', aux)."""
     n_tail = len(params["tail"]) if "tail" in params else 0
 
@@ -517,7 +521,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             hh, c, _ = _run_layer(
                 tpl, cfg, plan, p_group[i], hh,
                 positions=positions, mode=mode, cache=c_group[i], t=t,
-                policy=policy,
+                policy=policy, n_valid=n_valid,
             )
             newcs.append(c)
         return hh, tuple(newcs)
@@ -528,7 +532,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         h, c, _ = _run_layer(
             tpl, cfg, pattern[j], params["tail"][j], h,
             positions=positions, mode=mode, cache=cache["tail"][j], t=t,
-            policy=policy,
+            policy=policy, n_valid=n_valid,
         )
         tail_caches.append(c)
     return h, {"blocks": cache_blocks, "tail": tuple(tail_caches)}, jnp.zeros((), jnp.float32)
@@ -689,6 +693,42 @@ def decode_step(tpl: Template, cfg, params, token, t, cache,
     return logits[:, 0], cache
 
 
+def prefill_chunk_step(tpl: Template, cfg, params, tokens, t, n_valid, cache,
+                       policy: Optional[NumericsPolicy] = None):
+    """Advance a slot-indexed cache by one prefill *chunk* per batch row.
+
+    tokens: (B, S) int32 — row b holds the prompt slice covering positions
+    t[b]..t[b]+n_valid[b]-1 (right-padded to the fixed chunk width S);
+    t: (B,) with t[b] < 0 marking an inactive lane whose cache row is left
+    byte-identical; n_valid: (B,) real token counts (ragged final chunks).
+
+    One fixed-shape launch — the scheduler interleaves it with the batched
+    decode step so a long prompt streams into its slot chunk by chunk without
+    stalling resident decodes.  Returns (logits (B, V) read at each row's
+    last *valid* token — meaningful only for rows finishing their prompt this
+    chunk — and the updated cache).  Under a quantized ``policy`` the step is
+    grid-resident exactly like :func:`decode_step`.
+    """
+    t = jnp.asarray(t, jnp.int32).reshape(-1)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(-1)
+    s = tokens.shape[1]
+    h = _embed_tokens(cfg, params, tokens)
+    if getattr(cfg, "abs_pos", False):
+        qpos = t[:, None] + jnp.arange(s)[None, :]
+        h = h + jax.vmap(
+            jax.vmap(lambda tt: _sinusoid_at(tt, cfg.d_model, h.dtype))
+        )(qpos)
+    pattern, _, _ = _split(cfg)
+    h, cache, _ = _run_stack(
+        tpl, cfg, params, h, pattern=pattern, mode="decode",
+        positions=t, t=t, cache=cache, policy=policy, n_valid=nv,
+    )
+    last = jnp.clip(nv - 1, 0, s - 1)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)
+    logits = _head(tpl, cfg, params, h_last, policy=policy)
+    return logits[:, 0], cache
+
+
 # ---------------------------------------------------------------------------
 # decode-cache construction (for dry-run decode cells and serving)
 # ---------------------------------------------------------------------------
@@ -802,6 +842,78 @@ def insert_cache_slot(cache, slot: int, row_cache, *, valid_len=None):
         "blocks": jax.tree.map(ins(1), cache["blocks"], row_cache["blocks"]),
         "tail": jax.tree.map(ins(0), cache["tail"], row_cache["tail"]),
     }
+
+
+def insert_cache_rows(cache, rows_cache, *, src_rows, sel, valid_lens):
+    """Scatter rows of a batched (B_pre, L) prefill cache into cache slots.
+
+    The batched-bucket admission path: one prefill over B_pre stacked prompts
+    produces ``rows_cache`` (same cache_len as ``cache``); for every slot j
+    with ``sel[j]`` true, source row ``src_rows[j]`` is written into slot j
+    and its pad positions >= ``valid_lens[j]`` invalidated (pos = -1).
+    Slots with sel[j] false keep their bytes exactly (gather-select, no
+    scatter aliasing), so one fixed-shape call serves any admission subset.
+
+    ``src_rows``/``sel``/``valid_lens`` are (n_slots,) vectors; src_rows for
+    unselected slots may be arbitrary in-range indices.  k/v leaves stack the
+    batch at axis 1 under "blocks" and axis 0 under "tail"; the prefill's
+    shared pos vector — (C,) per row cache — is detected by the ndim
+    difference and expanded per slot.  Returns the new cache.
+    """
+    src = jnp.asarray(src_rows, jnp.int32)
+    selb = jnp.asarray(sel, bool)
+    vl = jnp.asarray(valid_lens, jnp.int32)
+    n = selb.shape[0]
+
+    def ins(batch_axis):
+        def put(dst, src_leaf):
+            if src_leaf.ndim < dst.ndim:
+                # shared prefill pos (..., C) -> per-slot (..., n, C) rows,
+                # pad positions trimmed per slot's real prompt length
+                pos = src_leaf[..., None, :]
+                pos = jnp.where(pos < vl[:, None], pos, -1)
+                return jnp.where(selb[:, None], pos, dst)
+            gathered = jnp.take(src_leaf, src, axis=batch_axis)
+            shape = [1] * dst.ndim
+            shape[batch_axis] = n
+            m = selb.reshape(shape)
+            return jnp.where(m, gathered.astype(dst.dtype), dst)
+
+        return put
+
+    return {
+        "blocks": jax.tree.map(ins(1), cache["blocks"], rows_cache["blocks"]),
+        "tail": jax.tree.map(ins(0), cache["tail"], rows_cache["tail"]),
+    }
+
+
+def clear_cache_rows(cache, sel):
+    """Invalidate the self-attention pos rows of selected slots (pos := -1).
+
+    Chunked admission streams a prompt into its slot with
+    :func:`prefill_chunk_step` instead of a whole-row insert, so stale ring
+    entries from the slot's previous occupant must be masked out first —
+    otherwise they stay visible at positions the chunks have not reached yet.
+    k/v bytes are left as-is (pos = -1 already hides them).  ``sel`` is an
+    (n_slots,) bool vector; unselected rows are untouched.
+    """
+    selb = jnp.asarray(sel, bool)
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for key, sub in node.items():
+                if key == "attn" and isinstance(sub, dict) and "pos" in sub:
+                    pos = sub["pos"]
+                    out[key] = {**sub, "pos": jnp.where(selb[:, None], -1, pos)}
+                else:
+                    out[key] = walk(sub)
+            return out
+        if isinstance(node, tuple):
+            return tuple(walk(x) for x in node)
+        return node
+
+    return walk(cache)
 
 
 def cache_axes(cfg, cache_shapes):

@@ -52,6 +52,19 @@ except ModuleNotFoundError:
 
         return _Strategy(draw)
 
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng, i):
+            if i == 0:
+                size = min_size
+            elif i == 1:
+                size = max_size
+            else:
+                size = rng.randint(min_size, max_size)
+            # offset the element draw index so list contents vary per example
+            return [elements._draw(rng, i + j + 1) for j in range(size)]
+
+        return _Strategy(draw)
+
     def _given(*strategies, **kw):
         assert not kw, "hypothesis shim supports positional strategies only"
 
@@ -85,6 +98,7 @@ except ModuleNotFoundError:
     _st = _types.ModuleType("hypothesis.strategies")
     _st.integers = _integers
     _st.floats = _floats
+    _st.lists = _lists
     _h.given = _given
     _h.settings = _settings
     _h.strategies = _st
