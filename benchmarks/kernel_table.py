@@ -326,6 +326,79 @@ def scheduler_mixed_trace_row() -> dict:
     }
 
 
+def router_failover_row() -> dict:
+    """Replicated-serving failover row, as JSON (in-process, virtual clock).
+
+    Two ServeScheduler replicas behind a :class:`ReplicaRouter`, one kill
+    injected mid-stream via :class:`FaultPlan`, sessions restored from the
+    dead replica's checkpoint: the global token ledger must come out
+    byte-identical to an unkilled single-replica run (zero lost, zero
+    duplicated tokens), with every regenerated overlap token verified equal
+    before being suppressed as a duplicate (DESIGN.md §9).
+    """
+    import tempfile
+
+    from repro.configs import get_config, reduced
+    from repro.core.template import default_template
+    from repro.launch.router import ReplicaRouter
+    from repro.launch.scheduler import (Request, SchedulerConfig,
+                                        ServeScheduler, VirtualClock)
+    from repro.models import transformer as T
+    from repro.runtime.failover import FaultPlan
+
+    cfg = reduced(get_config("qwen2-0.5b"))
+    tpl = default_template("pallas")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    ladder = (8, 16, 24)  # top rung holds max prompt 16 + max_new 4 resume
+
+    def make_sched(rid, clock):
+        return ServeScheduler(
+            cfg, params, tpl=tpl, clock=clock,
+            sched=SchedulerConfig(ladder=ladder, slots=3, max_new_limit=4))
+
+    def trace(base_rid):
+        rng = np.random.default_rng(3)
+        return [Request(prompt=tuple(int(t) for t in rng.integers(0, 96, n)),
+                        max_new=4, arrival=0.0, rid=base_rid + i)
+                for i, n in enumerate([5, 9, 3, 15, 8, 16, 2, 11])]
+
+    reference = ReplicaRouter(make_sched, 1, clock=VirtualClock())
+    ref_trace = trace(50_000)
+    reference.run(ref_trace)
+    ref = {i: reference.ledger.tokens(r.rid) for i, r in enumerate(ref_trace)}
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        router = ReplicaRouter(
+            make_sched, 2, clock=VirtualClock(),
+            fault_plan=FaultPlan(kills=((2, 0),)),
+            checkpoint_dir=ckpt, checkpoint_every=1)
+        kill_trace = trace(51_000)
+        t0 = time.perf_counter()
+        stats = router.run(kill_trace)
+        wall = time.perf_counter() - t0
+    got = {i: router.ledger.tokens(r.rid) for i, r in enumerate(kill_trace)}
+    router.assert_exactly_once()
+    c = stats["counters"]
+    return {
+        "bench": "router_failover",
+        "replicas": 2,
+        "requests": len(kill_trace),
+        "kill_tick": 2,
+        "ticks": stats["ticks"],
+        "completed": stats["completed"],
+        "killed": c.get("killed", 0),
+        "restarted": c.get("restarted", 0),
+        "requeued_sessions": c.get("requeued_sessions", 0),
+        "restored_sessions": c.get("restored_sessions", 0),
+        "restored_tokens": c.get("restored_tokens", 0),
+        "duplicates_suppressed": stats["duplicates_suppressed"],
+        "ledger_tokens": c.get("ledger_tokens", 0),
+        "byte_identical_vs_unkilled": got == ref,
+        "wall_s_interpret": round(wall, 3),
+        "stats_line": router.stats_line(),
+    }
+
+
 def main():
     print("== Kernel structural table (TPU v5e targets) ==")
     print(f"{'gemm':28s} {'block':>16s} {'vmem':>6s} {'mxu':>5s} "
@@ -374,6 +447,16 @@ def main():
     assert sched_row["prefill_coalescing"] > 1.0
     assert sched_row["launches_bounded_by_rungs"], \
         "a tick issued more prefill launches than occupied bucket rungs"
+    print("\n== replicated-serving failover (JSON, append-able trajectory) ==")
+    frow = router_failover_row()
+    print(json.dumps({k: v for k, v in frow.items() if k != "stats_line"}))
+    print("  " + frow["stats_line"])
+    assert frow["byte_identical_vs_unkilled"], \
+        "failover changed the token ledger (lost or corrupted tokens)"
+    assert frow["completed"] == frow["requests"]
+    assert frow["killed"] == 1 and frow["restarted"] == 1
+    assert frow["requeued_sessions"] > 0, \
+        "the kill must catch in-flight sessions for the row to mean anything"
     print("\n== VGG16 @ 512x512 network plan (route/tile regressions diff here) ==")
     from repro.core.template import default_template
     from repro.models.cnn import CNN_ZOO, plan_cnn

@@ -8,6 +8,7 @@
   kernel_table    — Pallas compute-unit structural metrics + oracle check
   q16_drift       — end-to-end fixed-point drift + per-token bytes (§8)
   scheduler_soak  — continuous-batching mixed-trace soak (virtual clock)
+  router_soak     — multi-process replica fleet + injected kill (§9)
   roofline_report — §Roofline table from the dry-run cache (if present)
 """
 from __future__ import annotations
@@ -31,7 +32,7 @@ def main():
 
     failures = []
     for name in ("table1", "table2", "dse_sweep", "kernel_table", "q16_drift",
-                 "scheduler_soak"):
+                 "scheduler_soak", "router_soak"):
         print("\n" + "=" * 72)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])

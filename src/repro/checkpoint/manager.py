@@ -27,7 +27,7 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "manifest_extra", "CheckpointManager"]
 
 _MANIFEST = "manifest.json"
 
@@ -120,6 +120,20 @@ def restore(directory: str, step: int, target_tree: Any,
     return tdef.unflatten([loaded[k] for k in keys])
 
 
+def manifest_extra(directory: str, step: int) -> dict:
+    """The ``extra`` metadata dict stored with checkpoint ``step``.
+
+    ``save(..., extra=...)`` persists arbitrary JSON alongside the arrays
+    (train loop hyperparams, and — since PR 7 — a serving replica's
+    in-flight session snapshots) but :func:`restore` only rebuilds the
+    array tree; this is the read path for the metadata half.
+    """
+    path = os.path.join(directory, f"step_{step:08d}", _MANIFEST)
+    with open(path) as f:
+        manifest = json.load(f)
+    return manifest.get("extra") or {}
+
+
 class CheckpointManager:
     """Keep-last-N rotation + auto-resume."""
 
@@ -151,3 +165,10 @@ class CheckpointManager:
         if step is None:
             return None, None
         return step, restore(self.directory, step, target_tree, shardings)
+
+    def latest_extra(self):
+        """(step, extra-dict) of the newest checkpoint, or (None, None)."""
+        step = self.latest()
+        if step is None:
+            return None, None
+        return step, manifest_extra(self.directory, step)

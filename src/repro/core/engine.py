@@ -40,6 +40,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import glob
 import json
 import os
 import time
@@ -431,15 +432,40 @@ class PlanRegistry:
         """The distinct hardware specs this registry holds entries for."""
         return {key[3] for key in self._blocks} | {key[-1] for key in self._conv_tiles}
 
+    def gemm_shapes(self, spec: TpuSpec = TPU_V5E) -> list:
+        """The distinct (m, n, k) GEMM keys planned for ``spec``, sorted.
+
+        Lets a mesh-mode scheduler warmup re-plan every GEMM it just traced
+        at its *local per-shard* shape (``Engine.plan_gemm(mesh=...)``)
+        without re-deriving the model's layer dimensions."""
+        return sorted(key[:3] for key in self._blocks if key[3] == spec)
+
     def save(self, path: str) -> str:
-        """Write the registry as versioned JSON (atomic replace)."""
+        """Write the registry as versioned JSON (stage-then-commit atomic).
+
+        The staged temp file is fsync'd before the ``os.replace`` commit so
+        a crash after the rename cannot leave the store pointing at
+        unflushed data; a crash *before* it leaves the previous store
+        untouched (plus a stale ``{path}.tmp.{pid}`` — garbage-collected by
+        the next :func:`save_plan_store` under the merge lock)."""
         doc = self.to_doc()
         tmp = f"{path}.tmp.{os.getpid()}"
-        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
             f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        try:  # make the rename itself durable
+            dfd = os.open(parent, os.O_RDONLY)
+            try:
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        except OSError:
+            pass
         return path
 
     def load(self, path: str) -> int:
@@ -549,7 +575,17 @@ def save_plan_store(path: Optional[str] = None) -> str:
                 pass
         for reg in _PLAN_CACHES.values():
             merged.merge_from(reg)
-        return merged.save(path)
+        out = merged.save(path)
+        # gc temp litter from writers that died inside the stage->commit
+        # window; safe under the merge lock (every store writer stages its
+        # temp file while holding it, so any `{path}.tmp.*` sibling we can
+        # see here is an orphan)
+        for stale in glob.glob(f"{path}.tmp.*"):
+            try:
+                os.unlink(stale)
+            except OSError:
+                pass
+        return out
 
 
 def load_plan_store(path: Optional[str] = None, *, missing_ok: bool = False) -> int:

@@ -67,6 +67,14 @@ from repro.core.engine import (
 from repro.core.quantization import NumericsPolicy
 from repro.core.template import Template, default_template
 from repro.models import transformer as T
+from repro.parallel.sharding import (
+    DECODE_RULES,
+    axis_size,
+    column_parallel_shardings,
+    local_gemm_shape,
+    tree_shardings,
+    use_mesh,
+)
 
 __all__ = [
     "Request",
@@ -79,7 +87,9 @@ __all__ = [
     "TRACE_COUNTS",
     "compiled_steps",
     "replay_trace",
+    "request_from_snapshot",
     "sampler_fn",
+    "session_snapshot",
     "synthetic_trace",
 ]
 
@@ -145,7 +155,8 @@ class StepFns(NamedTuple):
 
 
 def compiled_steps(tpl: Template, cfg, cache_len: int,
-                   policy: Optional[NumericsPolicy] = None) -> StepFns:
+                   policy: Optional[NumericsPolicy] = None, *,
+                   mesh=None, rules=None) -> StepFns:
     """The memoized :class:`StepFns` triple for one serving setup.
 
     prefill(params, tokens, ctx, last_pos)   -> (logits (B,V), cache)
@@ -160,9 +171,17 @@ def compiled_steps(tpl: Template, cfg, cache_len: int,
     matching :func:`repro.models.transformer.quantize_params` tree as
     ``params``.  The closure bodies bump :data:`TRACE_COUNTS` — they only
     run while jax is tracing.
+
+    With ``mesh`` the returned callables enter ``use_mesh(mesh, rules)``
+    (default :data:`~repro.parallel.sharding.DECODE_RULES`) around every
+    call, so the model's ``constrain`` seams resolve against the mesh at
+    trace time — mesh and no-mesh setups get *separate* memo entries and
+    never contaminate each other's traced constraints.
     """
     policy = validate_policy(tpl.config, policy)
-    key = (tpl, cfg, int(cache_len), policy)
+    if mesh is not None and rules is None:
+        rules = DECODE_RULES
+    key = (tpl, cfg, int(cache_len), policy, mesh, rules)
     fns = _STEP_FNS.pop(key, None)
     if fns is None:
         def _prefill(params, tokens, ctx, last_pos):
@@ -189,6 +208,14 @@ def compiled_steps(tpl: Template, cfg, cache_len: int,
             jax.jit(_decode, donate_argnums=(3,)),
             jax.jit(_chunk, donate_argnums=(4,)),
         )
+        if mesh is not None:
+            def _meshed(fn):
+                def call(*args):
+                    with use_mesh(mesh, rules):
+                        return fn(*args)
+                return call
+
+            fns = StepFns(*(_meshed(f) for f in fns))
         while len(_STEP_FNS) >= _STEP_FNS_MAX:
             _STEP_FNS.pop(next(iter(_STEP_FNS)))
     _STEP_FNS[key] = fns  # (re-)insert at the LRU tail
@@ -294,6 +321,47 @@ class Request:
         return self.max_new - len(self.generated)
 
 
+def session_snapshot(req: Request) -> dict:
+    """The JSON-serializable resume state of one in-flight request.
+
+    Carries exactly what a fresh scheduler needs to continue the session
+    with byte-identical output under greedy decode: the prompt, the tokens
+    generated so far (the re-prefill covers prompt + generated, then decode
+    continues at the next position), the total budget, and identity/arrival
+    metadata.  Scheduler-owned runtime state (slot, bucket, prefill
+    progress) is deliberately dropped — the restoring scheduler re-derives
+    it on admission.
+    """
+    return {
+        "rid": req.rid,
+        "prompt": list(req.prompt),
+        "generated": list(req.generated),
+        "max_new": req.max_new,
+        "eos_id": req.eos_id,
+        "arrival": req.arrival,
+        "preemptions": req.preemptions,
+    }
+
+
+def request_from_snapshot(doc: dict) -> Request:
+    """Rebuild a resumable :class:`Request` from :func:`session_snapshot`.
+
+    The original ``rid`` is preserved (the request is the *same* logical
+    session, so ledgers and results keyed by rid line up across the
+    restore); state resets to "new" for a fresh ``submit``.
+    """
+    req = Request(
+        prompt=tuple(doc["prompt"]),
+        max_new=int(doc["max_new"]),
+        eos_id=doc["eos_id"],
+        arrival=float(doc.get("arrival", 0.0)),
+        rid=int(doc["rid"]),
+    )
+    req.generated = [int(t) for t in doc.get("generated", ())]
+    req.preemptions = int(doc.get("preemptions", 0))
+    return req
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     """Admission/batching policy (the ladder is the shape contract)."""
@@ -337,7 +405,8 @@ class ServeScheduler:
     def __init__(self, cfg, params, *, sched: Optional[SchedulerConfig] = None,
                  tpl: Optional[Template] = None, clock=None,
                  policy: Optional[NumericsPolicy] = None,
-                 sampling: Optional[SamplingParams] = None) -> None:
+                 sampling: Optional[SamplingParams] = None,
+                 mesh=None, rules=None) -> None:
         pattern = T.plan_pattern(cfg)
         # "local" with a real window is also unsound: its ring cache is only
         # window-sized, so a bucket-padded prefill longer than the window
@@ -375,9 +444,36 @@ class ServeScheduler:
             raise ValueError(
                 f"prefill_chunk {self.sched.prefill_chunk} must be in "
                 f"[0, cache_len={self.cache_len}]")
+        # -- tensor-parallel decode (PR 7) ---------------------------------
+        # Bitwise-reproducible sharding: params column-parallel only (every
+        # GEMM keeps its full K extent per shard), activations gathered at
+        # the model's constrain seams (DECODE_RULES), the per-slot KV cache
+        # sharded over slots on the data-ish axes.  A replica's token stream
+        # is byte-identical whether it runs on one device or the mesh.
+        self.mesh = mesh
+        self.rules = (rules or DECODE_RULES) if mesh is not None else None
+        if mesh is not None:
+            data_shards = axis_size(mesh, self.rules.get("batch"))
+            if data_shards > 1 and self.sched.slots % data_shards:
+                raise ValueError(
+                    f"slots={self.sched.slots} must divide over the "
+                    f"{data_shards}-way data axes to shard the per-slot KV "
+                    f"cache")
+            axes = T.param_axes(cfg)
+            if (isinstance(self.exec_params, dict) and isinstance(axes, dict)
+                    and "lm_head" in self.exec_params and "lm_head" not in axes):
+                # quantize_params materializes an int16 head for tied
+                # embeddings; give it the untied head's logical axes
+                axes = dict(axes, lm_head={"w": ("embed", "vocab")})
+            self.exec_params = jax.device_put(
+                self.exec_params,
+                column_parallel_shardings(mesh, self.rules, self.exec_params,
+                                          axes),
+            )
         self.engine = self.tpl.engine
         self.registry = self.engine.plan_cache
-        fns = compiled_steps(self.tpl, cfg, self.cache_len, self.policy)
+        fns = compiled_steps(self.tpl, cfg, self.cache_len, self.policy,
+                             mesh=self.mesh, rules=self.rules)
         self._prefill, self._decode, self._chunk = fns
         self._sampler = (
             None if self.sampling.greedy
@@ -416,6 +512,20 @@ class ServeScheduler:
         self.history: list = []
         self.results: dict = {}  # rid -> Request (completed)
 
+    def _make_cache(self):
+        """A fresh slot-indexed KV cache, sharded over slots under a mesh."""
+        cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
+                             dtype=self.cache_dtype, per_slot=True)
+        if self.mesh is not None:
+            shapes = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)
+            cache = jax.device_put(
+                cache,
+                tree_shardings(self.mesh, self.rules, shapes,
+                               T.cache_axes(self.cfg, shapes)),
+            )
+        return cache
+
     # -- warmup --------------------------------------------------------------
 
     def warmup(self) -> dict:
@@ -437,8 +547,7 @@ class ServeScheduler:
                     jax.block_until_ready(
                         self._prefill(self.exec_params, toks, None, last)[0]
                     )
-        cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                             dtype=self.cache_dtype, per_slot=True)
+        cache = self._make_cache()
         if self.sched.prefill_chunk:
             ck = self.sched.prefill_chunk
             tok = jnp.zeros((self.sched.slots, ck), jnp.int32)
@@ -455,6 +564,25 @@ class ServeScheduler:
                 self._decode(self.exec_params, tok, tvec, cache)[0]
             )
         self.counters["warmup_decode_misses"] += decode_delta["misses"]
+        if self.mesh is not None:
+            # per-shard plans: re-plan every GEMM shape the traces above
+            # touched at its local (per-shard) extent, so mesh execution hits
+            # the registry for both the logical and the shard-local lookups
+            # and a warm-started replica replays with misses == 0.  A warm
+            # registry (restored from a store a previous mesh run wrote)
+            # already holds the local entries — skip shapes that are the
+            # local image of another registered shape, else each warmup
+            # would localize the locals again (quarter-shapes, and so on).
+            shapes = self.registry.gemm_shapes(self.engine.config.hw)
+            loc = {
+                s: local_gemm_shape(*s, mesh=self.mesh) for s in shapes
+            }
+            local_images = {img for s, img in loc.items() if img != s}
+            with self.registry.scope() as shard_delta:
+                for s in shapes:
+                    if s not in local_images:
+                        self.engine.plan_gemm(*s, mesh=self.mesh)
+            self.counters["warmup_shard_misses"] += shard_delta["misses"]
         return {b: dict(s) for b, s in self.bucket_stats.items()}
 
     # -- admission control ---------------------------------------------------
@@ -462,18 +590,28 @@ class ServeScheduler:
     def submit(self, req: Request) -> bool:
         """Queue a request; False (state=rejected) when admission control
         refuses it: unknown-bucket length, over-limit generation budget, a
-        sequence that would wrap the ring cache, or a full queue."""
+        sequence that would wrap the ring cache, or a full queue.
+
+        A *resumed* session (non-empty ``generated``, restored from a dead
+        replica's checkpoint) is budgeted by ``remaining``, not ``max_new``
+        — its already-generated tokens count toward ``seq_len``, so using
+        ``max_new`` would double-count them.  For a fresh request the two
+        are identical.
+        """
         self.counters["submitted"] += 1
         bucket = bucket_for(req.seq_len, self.sched.ladder)
         fits = (
             bucket is not None
-            and 0 < req.max_new <= self.sched.max_new_limit
-            and req.seq_len + req.max_new <= self.cache_len
+            and 0 < req.remaining
+            and req.max_new <= self.sched.max_new_limit
+            and req.seq_len + req.remaining <= self.cache_len
         )
         if not fits or len(self.queue) >= self.sched.max_queue:
             req.state = "rejected"
             self.counters["rejected"] += 1
             return False
+        if req.generated:
+            self.counters["resumed_sessions"] += 1
         req.bucket = bucket
         req.state = "queued"
         req.submitted_at = self.clock.now()
@@ -633,8 +771,7 @@ class ServeScheduler:
             event["preempted"].append(victim.rid)
 
         if admitted and self.cache is None:
-            self.cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                                      dtype=self.cache_dtype, per_slot=True)
+            self.cache = self._make_cache()
 
         ck = self.sched.prefill_chunk
         whole = [r for r in admitted if not ck or r.prefill_target <= ck]
@@ -741,6 +878,20 @@ class ServeScheduler:
             return False
         self.history.append(event)
         return event
+
+    def export_sessions(self) -> list:
+        """JSON-serializable snapshots of every in-flight session.
+
+        Active sessions first (in admission order — the FIFO order a
+        restoring router must resubmit them in), then the queued backlog in
+        queue order.  Together with the generated-so-far token lists this is
+        everything a failover needs to resume the replica's work exactly
+        (:mod:`repro.launch.router`); the checkpoint manager persists it as
+        the manifest's ``extra``.
+        """
+        order = sorted(self.active, key=lambda s: (self.active[s].admitted_at, s))
+        reqs = [self.active[s] for s in order] + list(self.queue)
+        return [session_snapshot(r) for r in reqs]
 
     def drain(self, *, tick: float = 0.0, max_steps: int = 100_000) -> None:
         """Run the event loop until queue and slots are empty."""

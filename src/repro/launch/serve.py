@@ -30,7 +30,51 @@ from repro.launch.scheduler import (
     replay_trace,
     sampler_fn,
 )
+from repro.launch.router import ReplicaRouter
 from repro.models import transformer as T
+
+
+def shards_mesh(shards: int):
+    """An ("data", "model") mesh with a ``shards``-way model axis over the
+    visible devices (1 = no mesh, single-device decode)."""
+    if shards <= 1:
+        return None
+    n = jax.device_count()
+    if n % shards:
+        raise SystemExit(
+            f"--shards {shards} does not divide the {n} visible devices")
+    return jax.make_mesh((n // shards, shards), ("data", "model"))
+
+
+def run_router(cfg, params, tpl, *, replicas: int, mesh=None,
+               requests: int, prompt_len: int, gen: int, seed: int,
+               policy=None, sampling=None) -> ReplicaRouter:
+    """Serve the synthetic request set across N scheduler replicas behind
+    the front-tier :class:`ReplicaRouter` (DESIGN.md §9).  Each replica runs
+    the same tensor-parallel mesh (or none); tokens drain into the router's
+    exactly-once ledger."""
+    ladder = tuple(sorted({max(4, prompt_len // 2), prompt_len, 2 * prompt_len}))
+
+    def make_sched(rid, clock):
+        return ServeScheduler(
+            cfg, params, tpl=tpl, clock=clock, policy=policy,
+            sampling=sampling, mesh=mesh,
+            sched=SchedulerConfig(ladder=ladder, slots=4,
+                                  max_new_limit=max(gen, 1),
+                                  max_queue=max(256, requests)),
+        )
+
+    router = ReplicaRouter(make_sched, replicas, clock=SystemClock(),
+                           tick_dt=0.0)
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(requests):
+        length = int(rng.integers(max(2, prompt_len // 2), 2 * prompt_len + 1))
+        prompt = synthetic_batch(seed, len(trace), 1, length, cfg.vocab)
+        trace.append(Request(prompt=tuple(int(t) for t in np.asarray(prompt)[0]),
+                             max_new=gen))
+    router.run(trace)
+    return router
 
 
 def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
@@ -82,7 +126,8 @@ def generate(cfg, params, tokens, ctx=None, *, gen: int = 16, cache_len=None,
 
 def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
                   gen: int, seed: int, clock=None, policy=None,
-                  sampling=None, prefill_chunk: int = 0) -> ServeScheduler:
+                  sampling=None, prefill_chunk: int = 0,
+                  mesh=None) -> ServeScheduler:
     """Serve a mixed-length synthetic request set through the
     continuous-batching scheduler (the production path of DESIGN.md §7).
 
@@ -94,7 +139,7 @@ def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
     ladder = tuple(sorted({max(4, prompt_len // 2), prompt_len, 2 * prompt_len}))
     sched = ServeScheduler(
         cfg, params, tpl=tpl, clock=clock or SystemClock(), policy=policy,
-        sampling=sampling,
+        sampling=sampling, mesh=mesh,
         # this path serves exactly `requests` requests, all arriving at t=0 —
         # the queue must hold the whole burst, rejection is not policy here
         sched=SchedulerConfig(ladder=ladder, slots=4, max_new_limit=max(gen, 1),
@@ -137,6 +182,14 @@ def main(argv=None):
                     help="serve through the continuous-batching scheduler "
                          "(mixed-length requests, bucketed prefill, coalesced "
                          "decode; DESIGN.md §7)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --scheduler: route requests across N "
+                         "data-parallel scheduler replicas behind the "
+                         "front-tier ReplicaRouter (DESIGN.md §9)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="with --scheduler: run each replica's decode step "
+                         "tensor-parallel over an N-way model axis "
+                         "(bitwise-equal to single-device; DESIGN.md §9)")
     ap.add_argument("--plan-store", default=None,
                     help=f"persisted plan-store path (default: ${PLAN_STORE_ENV})")
     args = ap.parse_args(argv)
@@ -178,13 +231,33 @@ def main(argv=None):
               f"top_k={sampling.top_k} seed={sampling.seed} "
               f"(per-lane RNG, reproducible per seed)")
     t0 = time.time()
-    if args.scheduler:
+    if args.scheduler and args.replicas > 1:
+        try:
+            router = run_router(cfg, params, tpl, replicas=args.replicas,
+                                mesh=shards_mesh(args.shards),
+                                requests=args.prompts,
+                                prompt_len=args.prompt_len, gen=args.gen,
+                                seed=args.seed, policy=policy,
+                                sampling=sampling)
+        except ValueError as err:
+            raise SystemExit(f"--replicas: {err}") from err
+        dt = time.time() - t0
+        ledger = router.ledger.as_dict()
+        n_tok = sum(len(s) for s in ledger.values())
+        print(f"[serve] arch={cfg.name} backend={args.backend} "
+              f"router replicas={args.replicas} shards={args.shards} "
+              f"requests={args.prompts} generated={n_tok} tokens "
+              f"in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+        print(f"[serve] {router.stats_line()}")
+        gen = [ledger[r] for r in sorted(ledger)]
+    elif args.scheduler:
         try:
             sched = run_scheduler(cfg, params, tpl, requests=args.prompts,
                                   prompt_len=args.prompt_len, gen=args.gen,
                                   seed=args.seed, policy=policy,
                                   sampling=sampling,
-                                  prefill_chunk=args.prefill_chunk)
+                                  prefill_chunk=args.prefill_chunk,
+                                  mesh=shards_mesh(args.shards))
         except ValueError as err:  # admission policy lives in ServeScheduler
             raise SystemExit(f"--scheduler: {err}") from err
         dt = time.time() - t0

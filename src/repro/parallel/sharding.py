@@ -28,6 +28,8 @@ __all__ = [
     "ShardingRules",
     "TRAIN_RULES",
     "SERVE_RULES",
+    "DECODE_RULES",
+    "column_parallel_shardings",
     "use_mesh",
     "active_mesh",
     "axis_size",
@@ -124,6 +126,46 @@ SERVE_RULES = _mk(
         "state": None,
         "ctx": None,
         "act_heads": "model",
+        "act_embed": None,
+    }
+)
+
+
+#: Bitwise-reproducible tensor-parallel decode (PR 7).  Serving replicas must
+#: produce token streams byte-identical to a single-device run, so every
+#: contraction (GEMM K) dimension stays shard-local: params are sharded
+#: *column-parallel only* (their final/output dim over "model", see
+#: :func:`column_parallel_shardings`) and activations are gathered back to
+#: replicated at the existing ``constrain`` seams between GEMMs.  Each shard
+#: then computes its output columns with the same left operand and the same
+#: reduction order as the unsharded program — no psum reduction whose
+#: float reassociation could flip low bits.  Batch (the per-slot KV cache
+#: slot dim) still shards over the data-ish axes; vocab stays sharded until
+#: the logits constraint gathers it for sampling.
+DECODE_RULES = _mk(
+    {
+        "batch": ("pod", "data"),
+        "seq": None,
+        "seq_act": None,
+        "seq_kv": None,
+        "embed": None,
+        "embed_tp": None,
+        "heads": None,
+        "kv_heads": None,
+        "head_dim": None,
+        "qkv": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "experts": None,
+        "expert_mlp": None,
+        "expert_cap": None,
+        "ssm_inner": None,
+        "rec": None,
+        "rec_in": None,
+        "conv_io": None,
+        "state": None,
+        "ctx": None,
+        "act_heads": None,
         "act_embed": None,
     }
 )
@@ -341,3 +383,32 @@ def tree_shardings(mesh: Mesh, rules: ShardingRules, shapes_tree, axes_tree):
         )
 
     return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+def column_parallel_shardings(mesh: Mesh, rules: ShardingRules, params_tree,
+                              axes_tree):
+    """Param shardings that keep every GEMM contraction shard-local.
+
+    Masks each logical-axes leaf down to its *final* (output/N) dimension
+    before resolving against ``rules`` — e.g. wq ("embed", "qkv") becomes
+    (None, "qkv") — so a parameter is only ever split along the columns it
+    *produces*.  Combined with :data:`DECODE_RULES` (activations replicated
+    at the constrain seams) this yields a tensor-parallel step whose every
+    partial product is computed with the full K extent in the original
+    reduction order: bitwise-equal to the single-device step, float and q16.
+
+    ``params_tree`` may be the float param tree or the quantized exec tree
+    (QTensor leaves expose ``.shape``); 1-D leaves (biases, norm scales)
+    keep their single logical name and shard iff the rules map it.
+    """
+
+    def one(axes_leaf, param_leaf):
+        if axes_leaf is None:
+            return NamedSharding(mesh, P())
+        masked = (None,) * (len(axes_leaf) - 1) + (axes_leaf[-1],)
+        return named_sharding(
+            mesh, rules, masked, dim_sizes=param_leaf.shape,
+            require_divisible=True,
+        )
+
+    return jax.tree.map(one, axes_tree, params_tree, is_leaf=_is_axes_leaf)

@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 __all__ = [
     "SimulatedFailure",
     "FailureInjector",
+    "FaultPlan",
     "HeartbeatMonitor",
     "detect_stragglers",
     "run_with_restarts",
@@ -51,6 +52,49 @@ class FailureInjector:
         if step in self.fail_at_steps and step not in self.fired:
             self.fired.add(step)
             raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, replayable fault schedule keyed to *virtual ticks*.
+
+    The serving analogue of :class:`FailureInjector`: instead of raising at
+    training steps, it tells the :class:`~repro.launch.router.ReplicaRouter`
+    what goes wrong at which tick of its event loop, so the same trace +
+    the same FaultPlan replays to the same token stream every run
+    (DESIGN.md §9).  Three fault species:
+
+    * ``kills``: ``(tick, replica)`` — replica dies at the *start* of the
+      tick (its last completed step was ``tick - 1``); the router drives
+      checkpoint-restore + requeue of its in-flight sessions.
+    * ``reject_windows``: ``(replica, first_tick, last_tick)`` — admission
+      to the replica is refused for ticks in the inclusive window (brown-out
+      / drain semantics); pending requests route elsewhere or wait.
+    * ``delayed_saves``: ``(replica, due_tick, delay_ticks)`` — the
+      replica's periodic plan-store write due at ``due_tick`` lands
+      ``delay_ticks`` late (slow-disk fault); the flock'd merge must still
+      converge to a complete store.
+    """
+
+    kills: tuple = ()
+    reject_windows: tuple = ()
+    delayed_saves: tuple = ()
+
+    def kills_at(self, tick: int) -> List[int]:
+        """Replica ids scheduled to die at the start of ``tick``."""
+        return [r for (t, r) in self.kills if t == tick]
+
+    def rejects_admission(self, replica: int, tick: int) -> bool:
+        return any(
+            r == replica and lo <= tick <= hi
+            for (r, lo, hi) in self.reject_windows
+        )
+
+    def save_delay(self, replica: int, due_tick: int) -> int:
+        for (r, t, d) in self.delayed_saves:
+            if r == replica and t == due_tick:
+                return int(d)
+        return 0
 
 
 class HeartbeatMonitor:

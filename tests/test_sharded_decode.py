@@ -1,0 +1,127 @@
+"""Sharded batched decode: 2-way tensor-parallel == single-device, bitwise.
+
+The decode TP design (DESIGN.md §9) is column-parallel only — every matmul
+shards its *output* dim over "model", activations are gathered back to
+replicated at the existing constrain seams, and the per-slot KV cache shards
+over "data" — precisely so the sharded computation performs the same
+reductions in the same order as the unsharded one.  That makes bitwise
+equality a testable contract (not a tolerance), in float AND in q16 (whose
+integer accumulation is exact regardless of split).
+
+Runs in a subprocess (needs ``--xla_force_host_platform_device_count=8``
+before jax imports, like test_plan_registry's mesh test).  Each mode also
+round-trips the plan store: the cold mesh run saves it, a warm restart
+(fresh caches, store re-loaded) must re-plan with **zero** DSE misses per
+shard and reproduce the same tokens.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.pop("REPRO_PLAN_STORE", None)
+    import json, tempfile
+    import jax
+    import numpy as np
+    from repro.configs import get_config, reduced
+    from repro.core.engine import (load_plan_store, reset_plan_caches,
+                                   save_plan_store)
+    from repro.core.template import default_template
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.scheduler import (Request, SchedulerConfig,
+                                        ServeScheduler, VirtualClock,
+                                        replay_trace)
+    from repro.models import transformer as T
+
+    MODE = os.environ["SHARD_TEST_MODE"]
+    cfg = reduced(get_config("qwen2-0.5b"))
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    LADDER = (8, 16)
+    mesh = make_test_mesh()  # (2, 2) over ("data", "model") on 8 host devices
+
+    tpl = default_template(MODE)
+    policy = None
+    if MODE == "q16":
+        cal = jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab)
+        policy = T.calibrate_policy(tpl, cfg, params, cal)
+
+    def trace():
+        rng = np.random.default_rng(7)
+        lens = [5, 9, 3, 15, 8, 16, 2]
+        return [Request(prompt=tuple(int(t) for t in rng.integers(0, 64, n)),
+                        max_new=4, arrival=0.0, rid=3000 + i)
+                for i, n in enumerate(lens)]
+
+    def run(mesh_arg):
+        s = ServeScheduler(
+            cfg, params, tpl=tpl, clock=VirtualClock(), policy=policy,
+            sched=SchedulerConfig(ladder=LADDER, slots=4, max_new_limit=8),
+            mesh=mesh_arg)
+        s.warmup()
+        replay_start = s.registry.misses
+        replay_trace(s, trace())
+        toks = {r.rid: list(r.generated) for r in s.results.values()}
+        return toks, s.registry.misses - replay_start, s
+
+    single, single_replay_misses, _ = run(None)
+    sharded, shard_replay_misses, s2 = run(mesh)
+
+    # warm restart: persist the store, drop every in-process cache, reload,
+    # and re-run sharded — warmup must plan from the store alone
+    store = tempfile.mktemp(suffix=".json")
+    save_plan_store(store)
+    reset_plan_caches()
+    n_loaded = load_plan_store(store)
+    warm, warm_replay_misses, s3 = run(mesh)
+
+    print(json.dumps({
+        "mode": MODE,
+        "tokens_equal": single == sharded,
+        "warm_tokens_equal": single == warm,
+        "sessions": len(single),
+        "total_tokens": sum(len(v) for v in single.values()),
+        "single_replay_misses": single_replay_misses,
+        "shard_replay_misses": shard_replay_misses,
+        "cold_warmup_shard_misses": int(s2.counters["warmup_shard_misses"]),
+        "warm_warmup_shard_misses": int(s3.counters["warmup_shard_misses"]),
+        "warm_replay_misses": warm_replay_misses,
+        "store_entries": n_loaded,
+    }))
+    """
+)
+
+
+@pytest.mark.parametrize("mode", ["pallas", "q16"])
+def test_sharded_decode_bitwise_and_warm_store(mode):
+    env = dict(os.environ, PYTHONPATH="src", SHARD_TEST_MODE=mode)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, f"sharded decode subprocess failed:\n{out.stderr[-4000:]}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+
+    # the differential contract: bitwise-identical token streams
+    assert rec["tokens_equal"], rec
+    assert rec["sessions"] == 7 and rec["total_tokens"] > 0
+
+    # a warmed scheduler never searches during replay, sharded or not
+    assert rec["single_replay_misses"] == 0, rec
+    assert rec["shard_replay_misses"] == 0, rec
+
+    # cold mesh warmup *does* plan per-shard local shapes...
+    assert rec["cold_warmup_shard_misses"] > 0, rec
+    # ...and a store round-trip makes every one of them a hit: zero DSE
+    # misses per shard on warm restart, with identical tokens
+    assert rec["warm_warmup_shard_misses"] == 0, rec
+    assert rec["warm_replay_misses"] == 0, rec
+    assert rec["warm_tokens_equal"], rec
+    assert rec["store_entries"] > 0
