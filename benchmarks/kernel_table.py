@@ -122,19 +122,38 @@ def spatial_tiling_row() -> dict:
 
     Structural: the acceptance-criteria layer (3×3, Cin=64, 512×512) whose
     untiled slab exceeds the v5e VMEM budget must plan ``direct`` with ≥ 2
-    spatial tiles and a modeled working set inside the budget.  Numeric: on
-    a shrunken budget the same planner decision is executed end-to-end and
-    checked against the im2col route (interpret=True).
+    spatial tiles, a (𝒯, ℭ) DMA-halo tiling, and a modeled working set
+    inside the budget.  The regime columns compare the DMA-halo scheme
+    against the best legal two-block config *at that config's tile dims*
+    (weights and output write-back move identically under either halo
+    scheme, so the honest gate is VMEM residency and the input-stream
+    traffic term — both must come out ≤ 0.6×).  Numeric: on a shrunken
+    budget the same planner decision is executed end-to-end and checked
+    against the im2col route (interpret=True).
     """
     import dataclasses
 
     from repro.core.engine import Engine
-    from repro.core.dse import direct_conv_vmem
+    from repro.core.dse import (direct_conv_input_traffic, direct_conv_vmem,
+                                explore_conv_spatial)
     from repro.core.template import TemplateConfig
 
     eng = Engine(TemplateConfig(backend="pallas", interpret=True))
     plan = eng.plan_conv((1, 512, 512, 64), (3, 3, 64, 64), stride=1, padding=1)
     untiled = direct_conv_vmem(514, 514, 64, 3, 3, 512, 512, plan.tau or 64, 4)
+    # best legal two-block config on the same layer (large top: the DMA
+    # configs dominate the ranking, the two-block baseline sits further down)
+    two_blk = next(c for c in explore_conv_spatial(
+        514, 514, 64, 3, 3, 512, 512, 64, 1, TPU_V5E, 4, top=4096)
+        if c.halo_mode == "two_block")
+    vm = {mode: direct_conv_vmem(
+        514, 514, 64, 3, 3, 512, 512, two_blk.tau, 4,
+        tile_rows=two_blk.tile_rows, halo_mode=mode)
+        for mode in ("two_block", "dma")}
+    tr = {mode: direct_conv_input_traffic(
+        514, 514, 64, 3, 3, 512, 512, 64, 1, two_blk.tau, 4,
+        tile_rows=two_blk.tile_rows, halo_mode=mode)
+        for mode in ("two_block", "dma")}
     # numeric differential at a budget that forces tiling on a small layer
     hw = dataclasses.replace(TPU_V5E, vmem_bytes=256 * 1024)
     eng_s = Engine(TemplateConfig(backend="pallas", interpret=True, hw=hw))
@@ -154,10 +173,21 @@ def spatial_tiling_row() -> dict:
         "tau": plan.tau,
         "tile_rows": plan.tile_rows,
         "spatial_tiles": plan.spatial_tiles,
+        "tile_cols": plan.tile_cols,
+        "col_tiles": plan.col_tiles,
+        "halo_mode": plan.halo_mode,
         "vmem_MiB": round(plan.vmem_bytes / 2**20, 1),
         "untiled_vmem_MiB": round(untiled / 2**20, 1),
         "budget_MiB": round(TPU_V5E.vmem_bytes / 2**20, 1),
+        "two_block_tile_rows": two_blk.tile_rows,
+        "vmem_MiB_two_block": round(vm["two_block"] / 2**20, 1),
+        "vmem_MiB_dma_same_tile": round(vm["dma"] / 2**20, 1),
+        "hbm_in_MiB_two_block": round(tr["two_block"] / 2**20, 1),
+        "hbm_in_MiB_dma_same_tile": round(tr["dma"] / 2**20, 1),
+        "vmem_ratio_dma_over_two_block": round(vm["dma"] / vm["two_block"], 3),
+        "hbm_ratio_dma_over_two_block": round(tr["dma"] / tr["two_block"], 3),
         "small_layer_tiles": p_dir.spatial_tiles,
+        "small_layer_halo": p_dir.halo_mode,
         "tiled_vs_im2col_max_err": err,
     }
 
@@ -417,6 +447,12 @@ def main():
     tiled = spatial_tiling_row()
     print(json.dumps(tiled))
     assert tiled["route"] == "direct" and tiled["spatial_tiles"] >= 2
+    assert tiled["halo_mode"] == "dma" and tiled["col_tiles"] >= 2, \
+        "the 512² layer must plan the (T, C) DMA-halo regime, not fall back"
+    assert tiled["vmem_ratio_dma_over_two_block"] <= 0.6, \
+        "DMA-halo VMEM residency must be at most 0.6x the two-block scheme"
+    assert tiled["hbm_ratio_dma_over_two_block"] <= 0.6, \
+        "DMA-halo input re-streaming must be at most 0.6x the two-block scheme"
     assert tiled["tiled_vs_im2col_max_err"] < 1e-4
     print("\n== plan store cold vs warm (JSON, append-able trajectory) ==")
     warm_row = plan_store_warm_start_row()

@@ -15,11 +15,13 @@ analytic and exhaustive over a quantized grid:
   Pallas kernels use.
 
 * :func:`explore_conv_spatial` — TPU plane, direct conv: enumerate the
-  direct-conv kernel's (τ, tile_rows) grid — output-channel tile × spatial
-  output-row tile (the paper's 𝒯 tile) — inside the VMEM working-set model
-  (:func:`direct_conv_vmem`) and rank by a compute-unit utilization score.
-  This is what lets oversized layers (ZynqNet-style large early-layer
-  feature maps) stay on the direct route instead of spilling to im2col.
+  direct-conv kernel's (τ, tile_rows, tile_cols, halo_mode) grid —
+  output-channel tile × the paper's 𝒯/ℭ spatial tiles × input-halo regime
+  (untiled / two-block / manual-DMA) — inside the VMEM working-set model
+  (:func:`direct_conv_vmem`) and rank by the HBM-traffic score
+  (:func:`direct_conv_hbm_traffic`).  This is what lets oversized layers
+  (ZynqNet-style large early-layer feature maps) stay on the direct route
+  instead of spilling to im2col.
 """
 from __future__ import annotations
 
@@ -41,6 +43,9 @@ __all__ = [
     "default_block_for",
     "default_conv_tile_for",
     "direct_conv_vmem",
+    "direct_conv_hbm_traffic",
+    "direct_conv_ideal_traffic",
+    "direct_conv_input_traffic",
 ]
 
 
@@ -146,46 +151,164 @@ def default_block_for(m: int, n: int, k: int, spec: TpuSpec = TPU_V5E) -> Matmul
 
 
 # ---------------------------------------------------------------------------
-# TPU plane: direct-conv spatial tiling (the paper's 𝒯 tile on the row axis)
+# TPU plane: direct-conv spatial tiling (the paper's 𝒯/ℭ tiles)
 # ---------------------------------------------------------------------------
+
+
+def _eff_tiles(ho: int, wo: int, tile_rows: int, tile_cols: int):
+    """Normalize a (tile_rows, tile_cols) request to effective tile dims."""
+    th = tile_rows if 0 < tile_rows < ho else ho
+    tw = tile_cols if 0 < tile_cols < wo else wo
+    return th, tw
+
+
+def _infer_halo_mode(ho: int, wo: int, th: int, tw: int, halo_mode) -> str:
+    """Default regime for legacy callers that don't pass ``halo_mode``:
+    column tiling forces DMA; row-only tiling keeps the PR 2 two-block
+    scheme; no tiling is the untiled whole-slab regime."""
+    if halo_mode is not None:
+        return halo_mode
+    if tw < wo:
+        return "dma"
+    return "two_block" if th < ho else "none"
 
 
 def direct_conv_vmem(
     hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, tau: int,
     in_bytes: int, acc_bytes: int = 4, *, stride: int = 1, tile_rows: int = 0,
+    tile_cols: int = 0, halo_mode: Optional[str] = None,
 ) -> int:
     """VMEM working set of one direct-conv grid step (double-buffered I/O).
 
-    Untiled (``tile_rows`` 0 or ≥ Ho): the whole padded image slab is
-    resident.  Spatially tiled: each step holds *two* adjacent
-    ``stride·tile_rows``-row input blocks — the tile plus its successor,
-    which supplies the ``kh - stride`` halo rows (``kernels/conv2d.py``) —
-    plus the same-sized concatenated copy the kernel materializes to stitch
-    them, and the accumulator/output shrink from Ho to tile_rows output
-    rows.
+    Three regimes (``halo_mode``, inferred from the tile dims when omitted):
+
+    * ``"none"`` — untiled: the whole padded image slab is resident
+      (double-buffered).
+    * ``"two_block"`` — row-tiled with blocked successor reads: each step
+      holds *two* adjacent ``stride·tile_rows``-row full-width input blocks
+      (the tile plus the successor supplying the ``kh − stride`` halo rows)
+      plus the same-sized concatenated copy the kernel materializes to
+      stitch them — a ~6× tile-rows residency.
+    * ``"dma"`` — (𝒯, ℭ)-tiled with manual async copies: exactly the
+      ``stride·tile_rows + kh − stride`` × ``stride·tile_cols + kw −
+      stride`` input window a tile reads, double-buffered (×2) for the
+      prefetch pipeline — roughly half the two-block residency at equal
+      tile_rows, and the only regime that tiles the width.
+
+    The accumulator/output shrink to tile_rows × tile_cols output pixels.
     """
-    th = tile_rows if 0 < tile_rows < ho else ho
-    if th < ho:
+    th, tw = _eff_tiles(ho, wo, tile_rows, tile_cols)
+    mode = _infer_halo_mode(ho, wo, th, tw, halo_mode)
+    if mode == "none":
+        x = hp * wp * cin * in_bytes * 2
+    elif mode == "two_block":
+        if tw < wo:
+            raise ValueError("two_block halo cannot tile columns (use 'dma')")
         rows = 2 * stride * th
         # two double-buffered input blocks + the in-kernel concat buffer
         x = rows * wp * cin * in_bytes * 3
+    elif mode == "dma":
+        rows_in = min(hp, stride * th + kh - stride)
+        cols_in = min(wp, stride * tw + kw - stride)
+        x = 2 * rows_in * cols_in * cin * in_bytes  # double-buffered window
     else:
-        x = hp * wp * cin * in_bytes * 2
+        raise ValueError(f"unknown halo_mode {mode!r}")
     w = kh * kw * cin * tau * in_bytes * 2
-    acc = th * wo * tau * acc_bytes
-    out = th * wo * tau * in_bytes * 2
+    acc = th * tw * tau * acc_bytes
+    out = th * tw * tau * in_bytes * 2
     return x + w + acc + out
+
+
+def direct_conv_hbm_traffic(
+    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, cout: int,
+    stride: int, tau: int, in_bytes: int, *, tile_rows: int = 0,
+    tile_cols: int = 0, halo_mode: Optional[str] = None,
+) -> int:
+    """Modeled HBM bytes one forward pass of the layer actually moves.
+
+    The cost model behind the conv DSE score (and the bench table's
+    HBM-traffic column):
+
+    * the image streams once per τ-way (ceil(cout/τ) output-channel tiles);
+      the two-block regime additionally re-streams every full-width block
+      ~2× (each block is also its predecessor's halo), while the DMA regime
+      fetches each tile's exact window once — only the ``kh/kw − stride``
+      overlap between neighbouring windows is paid twice,
+    * the τ-wide weight slab is re-fetched once per spatial tile,
+    * padded output tiles (tiles·th ≥ ho etc.) and padded channels
+      (coutp ≥ cout) are wasted write-back traffic.
+    """
+    th, tw = _eff_tiles(ho, wo, tile_rows, tile_cols)
+    mode = _infer_halo_mode(ho, wo, th, tw, halo_mode)
+    coutp = ceil_div(cout, tau) * tau
+    ways = coutp // tau
+    tiles_r = ceil_div(ho, th)
+    tiles_c = ceil_div(wo, tw)
+    tiles = tiles_r * tiles_c
+    if mode == "none":
+        x_traffic = ways * hp * wp * cin
+    elif mode == "two_block":
+        x_traffic = ways * tiles_r * 2 * stride * th * wp * cin
+    elif mode == "dma":
+        rows_in = min(hp, stride * th + kh - stride)
+        cols_in = min(wp, stride * tw + kw - stride)
+        x_traffic = ways * tiles * rows_in * cols_in * cin
+    else:
+        raise ValueError(f"unknown halo_mode {mode!r}")
+    w_traffic = tiles * kh * kw * cin * coutp
+    out_traffic = tiles * th * tw * coutp
+    return (x_traffic + w_traffic + out_traffic) * in_bytes
+
+
+def direct_conv_input_traffic(
+    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, cout: int,
+    stride: int, tau: int, in_bytes: int, *, tile_rows: int = 0,
+    tile_cols: int = 0, halo_mode: Optional[str] = None,
+) -> int:
+    """The input-stream component of :func:`direct_conv_hbm_traffic` alone.
+
+    This is the term the halo regime actually changes (weights and output
+    write-back move identically under either scheme at equal tile dims), so
+    it is what the bench table's ≤ 0.6× DMA-vs-two-block gate compares.
+    """
+    full = direct_conv_hbm_traffic(
+        hp, wp, cin, kh, kw, ho, wo, cout, stride, tau, in_bytes,
+        tile_rows=tile_rows, tile_cols=tile_cols, halo_mode=halo_mode,
+    )
+    th, tw = _eff_tiles(ho, wo, tile_rows, tile_cols)
+    coutp = ceil_div(cout, tau) * tau
+    tiles = ceil_div(ho, th) * ceil_div(wo, tw)
+    w_out = tiles * (kh * kw * cin * coutp + th * tw * coutp) * in_bytes
+    return full - w_out
+
+
+def direct_conv_ideal_traffic(
+    hp: int, wp: int, cin: int, kh: int, kw: int, ho: int, wo: int, cout: int,
+    in_bytes: int,
+) -> int:
+    """Lower-bound HBM bytes: image + weights + output each touched once."""
+    return (hp * wp * cin + kh * kw * cin * cout + ho * wo * cout) * in_bytes
 
 
 @dataclasses.dataclass(frozen=True)
 class ConvTileChoice:
-    """One legal direct-conv compute-unit configuration (τ, spatial tile)."""
+    """One legal direct-conv compute-unit configuration (τ, 𝒯, ℭ, regime).
+
+    ``tile_rows``/``tile_cols`` are output rows/columns per grid step (== the
+    full extent when untiled on that axis); ``halo_mode`` names the input
+    regime ("none" | "two_block" | "dma", see :func:`direct_conv_vmem`).
+    The defaults on the PR 8 fields keep hand-built pre-column-tiling
+    choices constructible (row-tiled two-block or untiled semantics).
+    """
 
     tau: int
     tile_rows: int  # output rows per grid step (== ho when untiled)
     spatial_tiles: int  # ceil(ho / tile_rows)
     vmem_bytes: int
     score: float
+    tile_cols: int = 0  # output cols per grid step (0/== wo: untiled axis)
+    col_tiles: int = 1  # ceil(wo / tile_cols)
+    halo_mode: str = ""  # "" on legacy choices: infer from the tile dims
 
 
 def conv_choice_to_doc(choice: ConvTileChoice) -> dict:
@@ -201,43 +324,54 @@ def conv_choice_from_doc(doc: dict) -> ConvTileChoice:
         spatial_tiles=int(doc["spatial_tiles"]),
         vmem_bytes=int(doc["vmem_bytes"]),
         score=float(doc["score"]),
+        tile_cols=int(doc.get("tile_cols", 0)),
+        col_tiles=int(doc.get("col_tiles", 1)),
+        halo_mode=str(doc.get("halo_mode", "")),
     )
 
 
 def _conv_tile_score(
-    tau: int, th: int, hp: int, wp: int, cin: int, kh: int, kw: int,
-    ho: int, wo: int, cout: int, stride: int, spec: TpuSpec,
+    tau: int, th: int, tw: int, halo_mode: str, hp: int, wp: int, cin: int,
+    kh: int, kw: int, ho: int, wo: int, cout: int, stride: int, spec: TpuSpec,
+    in_bytes: int,
 ) -> float:
-    """Compute-unit utilization of one (τ, tile_rows) configuration.
+    """Compute-unit utilization of one (τ, 𝒯, ℭ, regime) configuration.
 
-    Traffic-based: ideal HBM bytes (image + weights + output each touched
-    once) over the bytes the grid actually moves — the TPU analogue of the
-    paper's ceil(p/μ)·ceil(q/τ) invocation-waste terms:
-
-    * the image is re-streamed once per τ-way (ceil(cout/τ) output-channel
-      tiles), and the two-block halo scheme holds ~2× the tile's rows,
-    * the τ-wide weight slab is re-fetched once per spatial tile,
-    * padded output rows (tiles·th ≥ ho) and padded channels (coutp ≥ cout)
-      are wasted write-back traffic,
-
-    times the MXU row occupancy of the per-step (th·wo, cin) GEMM.  Untiled
-    pays no halo or weight refetch, so it wins whenever it fits; among tiled
-    configs the score trades τ-width (image refetch) against tile height
-    (weight refetch).
+    Traffic-based: ideal HBM bytes over the bytes the grid actually moves
+    (:func:`direct_conv_hbm_traffic`) — the TPU analogue of the paper's
+    ceil(p/μ)·ceil(q/τ) invocation-waste terms — times the MXU row occupancy
+    of the per-step (th·tw, cin) GEMM.  Untiled pays no halo or weight
+    refetch, so it wins whenever it fits; among tiled configs DMA beats
+    two-block at equal tile dims (strictly less input re-streaming), and
+    squarer (𝒯, ℭ) windows beat full-width strips of the same area because
+    the two-sided halo overlap shrinks with the perimeter-to-area ratio.
     """
-    coutp = ceil_div(cout, tau) * tau
-    ways = coutp // tau
-    tiles = ceil_div(ho, th)
-    if th >= ho:
-        x_traffic = ways * hp * wp * cin
-    else:
-        x_traffic = ways * tiles * 2 * stride * th * wp * cin
-    w_traffic = tiles * kh * kw * cin * coutp
-    out_traffic = tiles * th * wo * coutp
-    ideal = hp * wp * cin + kh * kw * cin * cout + ho * wo * cout
-    rows = th * wo
+    traffic = direct_conv_hbm_traffic(
+        hp, wp, cin, kh, kw, ho, wo, cout, stride, tau, in_bytes,
+        tile_rows=th, tile_cols=tw, halo_mode=halo_mode,
+    )
+    ideal = direct_conv_ideal_traffic(hp, wp, cin, kh, kw, ho, wo, cout, in_bytes)
+    rows = th * min(tw, wo)
     m_eff = rows / (ceil_div(rows, spec.mxu_dim) * spec.mxu_dim)
-    return ideal / (x_traffic + w_traffic + out_traffic) * m_eff
+    return ideal / traffic * m_eff
+
+
+def _tile_ladder(extent: int, lo: int) -> list[int]:
+    """Candidate tile sizes for one spatial axis, largest first.
+
+    The halving ladder (extent, ⌈extent/2⌉, …, lo) gives geometric coverage;
+    every divisor of the extent in [lo, extent] is added so exact tilings —
+    no ragged final tile, no padded write-back waste — are always
+    enumerable (e.g. Ho=27 offers 9 and 3, not just 27→14→7→4).
+    """
+    lo = max(1, min(lo, extent))
+    vals = {d for d in range(lo, extent + 1) if extent % d == 0}
+    t = extent
+    while t > lo:
+        vals.add(t)
+        t = ceil_div(t, 2)
+    vals.add(lo)
+    return sorted(vals, reverse=True)
 
 
 def explore_conv_spatial(
@@ -254,12 +388,17 @@ def explore_conv_spatial(
     in_bytes: int = 4,
     top: int = 5,
 ) -> list[ConvTileChoice]:
-    """Enumerate legal (τ, tile_rows) direct-conv configs; rank by score.
+    """Enumerate legal (τ, tile_rows, tile_cols, halo_mode) configs; rank by
+    the HBM-traffic score.
 
     τ ladder: min(lane, cout) halved down to 8 (same ladder the engine used
-    pre-tiling).  tile_rows ladder: Ho halved down to the smallest tile whose
-    input block still covers the tap window (stride·tile_rows ≥ kh, the
-    two-block halo legality bound).
+    pre-tiling).  Tile ladders (:func:`_tile_ladder`): halving steps plus
+    every exact divisor of the extent.  Three regimes are enumerated:
+    untiled whole-slab, row-tiled two-block (legality: stride·tile_rows ≥
+    kh so the successor block covers the tap window), and (𝒯, ℭ)-tiled
+    manual-DMA — which has no legality bound (the window always covers the
+    taps) and is the only regime that tiles the width, so extreme-width
+    layers stay direct instead of falling back to im2col.
     """
     tau0 = min(spec.lane, cout)
     taus = []
@@ -269,24 +408,27 @@ def explore_conv_spatial(
         if t <= 8:
             break
         t //= 2
-    th_min = max(1, ceil_div(kh, stride))
-    ths = []
-    t = ho
-    while t > th_min:
-        ths.append(t)
-        t = ceil_div(t, 2)
-    ths.append(max(th_min, min(t, ho)))
+    th_two_min = max(1, ceil_div(kh, stride))
+    configs: list[tuple[int, int, str]] = [(ho, wo, "none")]
+    for th in _tile_ladder(ho, th_two_min):
+        if th < ho and stride * th >= kh:
+            configs.append((th, wo, "two_block"))
+    for th in _tile_ladder(ho, 1):
+        for tw in _tile_ladder(wo, 1):
+            if th >= ho and tw >= wo:
+                continue  # the untiled regime already covers the whole slab
+            configs.append((th, tw, "dma"))
     out: list[ConvTileChoice] = []
-    for tau, th in itertools.product(taus, dict.fromkeys(ths)):
-        if th < ho and stride * th < kh:
-            continue  # halo block cannot cover the tap window
+    for tau, (th, tw, mode) in itertools.product(taus, configs):
         vmem = direct_conv_vmem(
-            hp, wp, cin, kh, kw, ho, wo, tau, in_bytes, stride=stride, tile_rows=th
+            hp, wp, cin, kh, kw, ho, wo, tau, in_bytes, stride=stride,
+            tile_rows=th, tile_cols=tw, halo_mode=mode,
         )
         if vmem > spec.vmem_bytes:
             continue
         score = _conv_tile_score(
-            tau, th, hp, wp, cin, kh, kw, ho, wo, cout, stride, spec
+            tau, th, tw, mode, hp, wp, cin, kh, kw, ho, wo, cout, stride,
+            spec, in_bytes,
         )
         out.append(
             ConvTileChoice(
@@ -295,9 +437,17 @@ def explore_conv_spatial(
                 spatial_tiles=ceil_div(ho, th),
                 vmem_bytes=vmem,
                 score=score,
+                tile_cols=tw,
+                col_tiles=ceil_div(wo, tw),
+                halo_mode=mode,
             )
         )
-    out.sort(key=lambda c: (-c.score, -c.tau, -c.tile_rows))
+    # deterministic rank: score, then wider τ, then taller/wider tiles, then
+    # regime name — ties between symmetric (𝒯, ℭ) transposes resolve to the
+    # taller tile
+    out.sort(
+        key=lambda c: (-c.score, -c.tau, -c.tile_rows, -c.tile_cols, c.halo_mode)
+    )
     return out[:top]
 
 

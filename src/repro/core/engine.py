@@ -10,7 +10,8 @@ template.  This module is that split for the TPU plane:
   hit/miss counters so tests (and ops dashboards) can assert no re-search
   happens on the hot path.  Beyond the in-process memo the registry
   *persists*: ``save``/``load`` round-trip GEMM blocks and direct-conv
-  (τ, tile_rows) choices — including cached no-fit sentinels — as versioned
+  (τ, tile_rows, tile_cols, halo_mode) choices — including cached no-fit
+  sentinels — as versioned
   JSON keyed by (shape..., :class:`~repro.core.tiling.TpuSpec`), and
   ``measure_and_pin`` overwrites the analytic choice with a measured-time
   winner (per-entry ``source`` provenance: ``analytic`` vs ``measured``).
@@ -65,6 +66,7 @@ __all__ = [
     "PLAN_STORE_ENV",
     "PLAN_STORE_FORMAT",
     "PLAN_STORE_VERSION",
+    "PLAN_STORE_COMPAT_VERSIONS",
     "PlanCache",
     "PlanRegistry",
     "PlanStoreError",
@@ -128,7 +130,12 @@ def batch_rungs(slots: int) -> tuple:
 # ---------------------------------------------------------------------------
 
 PLAN_STORE_FORMAT = "repro-plan-store"
-PLAN_STORE_VERSION = 1
+#: v2 (PR 8) added the ConvTileChoice column-tiling fields (tile_cols,
+#: col_tiles, halo_mode).  v1 stores still load: their gemm entries merge
+#: unchanged (same schema), their conv entries are dropped so those layers
+#: re-plan against the three-regime DSE instead of raising PlanStoreError.
+PLAN_STORE_VERSION = 2
+PLAN_STORE_COMPAT_VERSIONS = (1,)
 #: Env var naming the default persisted plan-store path.  When set, the
 #: launch drivers (serve/train) and the benchmark harness warm-start from it
 #: and write newly planned shapes back on exit.
@@ -154,7 +161,8 @@ class PlanRegistry:
     """Memoized DSE selection: GEMM blocks and direct-conv tile configs.
 
     GEMM blocks are keyed by (m, n, k, hardware spec); direct-conv
-    (τ, tile_rows) choices by the layer geometry + spec.  ``misses`` counts
+    (τ, tile_rows, tile_cols, halo_mode) choices by the layer geometry +
+    spec.  ``misses`` counts
     actual grid searches performed (either kind); ``hits`` counts lookups
     served from the registry.  A repeated shape must cost exactly one search
     for the lifetime of the registry — or *zero* when the entry was
@@ -350,7 +358,11 @@ class PlanRegistry:
         Loaded entries overwrite existing ones and count as neither hits nor
         misses (a later lookup of a loaded entry is a hit).  Returns the
         number of entries merged; raises :class:`PlanStoreError` on any
-        format/version/structure mismatch.
+        format/structure mismatch or an *unknown* version.  A known older
+        version (``PLAN_STORE_COMPAT_VERSIONS``) loads leniently: gemm
+        entries merge (their schema is unchanged), conv entries are skipped
+        so those layers re-plan under the current DSE — a warm fleet store
+        survives the upgrade instead of crashing the loader.
         """
         blocks: dict = {}
         block_src: dict = {}
@@ -362,11 +374,13 @@ class PlanRegistry:
                     f"not a plan store (format={doc.get('format')!r}, "
                     f"want {PLAN_STORE_FORMAT!r})"
                 )
-            if doc.get("version") != PLAN_STORE_VERSION:
+            version = doc.get("version")
+            if version != PLAN_STORE_VERSION and version not in PLAN_STORE_COMPAT_VERSIONS:
                 raise PlanStoreError(
-                    f"plan store version {doc.get('version')!r} does not match "
+                    f"plan store version {version!r} does not match "
                     f"this build's version {PLAN_STORE_VERSION}"
                 )
+            legacy_conv = version != PLAN_STORE_VERSION
             specs = [_spec_from_doc(d) for d in doc["specs"]]
 
             def spec_at(ix) -> TpuSpec:
@@ -384,6 +398,10 @@ class PlanRegistry:
                 blocks[key] = MatmulBlock(*(int(v) for v in e["block"]))
                 block_src[key] = str(e.get("source", "analytic"))
             for e in doc["conv"]:
+                if legacy_conv:
+                    # pre-column-tiling choice docs lack (tile_cols,
+                    # halo_mode); dropping them re-plans those layers
+                    continue
                 key = tuple(int(v) for v in e["key"]) + (spec_at(e["spec"]),)
                 if len(key) != 11:
                     raise PlanStoreError(f"bad conv key of length {len(key)}")
@@ -670,6 +688,12 @@ class ConvPlan:
     vmem_bytes: modeled VMEM working set of the chosen route's grid step.
     tile_rows: direct-route output rows per grid step (0 = whole image).
     spatial_tiles: ceil(Ho / tile_rows) — grid steps along the row axis.
+    tile_cols: direct-route output columns per grid step (0 = full width;
+        only the DMA-halo regime tiles this axis).
+    col_tiles: ceil(Wo / tile_cols) — grid steps along the column axis.
+    halo_mode: tiled-input regime — "none" (untiled), "two_block" (blocked
+        successor reads), or "dma" (exact-window async copies); see
+        kernels/conv2d.py and DESIGN.md §2.
     """
 
     route: str
@@ -681,6 +705,9 @@ class ConvPlan:
     vmem_bytes: int
     tile_rows: int = 0
     spatial_tiles: int = 1
+    tile_cols: int = 0
+    col_tiles: int = 1
+    halo_mode: str = "none"
 
 
 #: VMEM working-set model of one direct-conv grid step — lives with the rest
@@ -803,11 +830,13 @@ class Engine:
         """Pick the kernel route for one conv layer (DESIGN.md §2).
 
         Direct route: the DSE (``dse.explore_conv_spatial``, memoized in the
-        plan cache) picks the (τ, tile_rows) compute-unit config — whole-slab
-        when the padded image fits the VMEM budget, an output-row spatial
-        tiling with two-block halo reads when it doesn't.  Only when *no*
-        (τ, tile_rows) fits does the layer fall back to the im2col GEMM with
-        a plan-cached DSE block.  ``route`` forces a route (tests /
+        plan cache) picks the (τ, tile_rows, tile_cols, halo_mode)
+        compute-unit config — whole-slab when the padded image fits the VMEM
+        budget, otherwise a (𝒯, ℭ) spatial tiling whose halo regime the
+        HBM-traffic score chooses (the manual-DMA regime wins over two-block
+        whenever legal — strictly less re-streaming and residency).  Only
+        when *no* config fits does the layer fall back to the im2col GEMM
+        with a plan-cached DSE block.  ``route`` forces a route (tests /
         benchmarks).  With ``mesh`` the *local* shard of the layer is planned:
         batch over the partition's M axes, output channels over its N axes.
         """
@@ -834,9 +863,14 @@ class Engine:
             )
             if choice is not None:
                 tile_rows = 0 if choice.tile_rows >= ho else choice.tile_rows
+                tile_cols = 0 if (choice.tile_cols or wo) >= wo else choice.tile_cols
+                halo_mode = choice.halo_mode or (
+                    "two_block" if tile_rows else "none"
+                )
                 return ConvPlan(
                     "direct", stride, pad, choice.tau, None, gemm,
                     choice.vmem_bytes, tile_rows, choice.spatial_tiles,
+                    tile_cols, choice.col_tiles, halo_mode,
                 )
             if route == "direct":
                 raise ValueError(
@@ -1079,7 +1113,8 @@ class Engine:
             x.raw, w.raw, bias=b_raw, stride=stride, padding=pad, tau=plan.tau,
             relu=relu, fmt=out_fmt, shift=acc_frac - out_fmt.frac_bits,
             bias_shift=bias_shift, route=plan.route, block=plan.block,
-            tile_rows=plan.tile_rows, interpret=self.config.interpret,
+            tile_rows=plan.tile_rows, tile_cols=plan.tile_cols,
+            halo_mode=plan.halo_mode, interpret=self.config.interpret,
         )
         return QTensor(out, out_fmt)
 
@@ -1232,7 +1267,8 @@ class Engine:
             return kops.conv2d(
                 x, w, bias=bias, stride=stride, padding=pad, tau=plan.tau,
                 relu=relu, qout=qout, route=plan.route, block=plan.block,
-                tile_rows=plan.tile_rows, interpret=self.config.interpret,
+                tile_rows=plan.tile_rows, tile_cols=plan.tile_cols,
+                halo_mode=plan.halo_mode, interpret=self.config.interpret,
             )
         assert backend == "q16", backend
         # legacy per-op fixed point (see matmul): quantize/dequantize every
@@ -1252,6 +1288,8 @@ class Engine:
             route=plan.route,
             block=plan.block,
             tile_rows=plan.tile_rows,
+            tile_cols=plan.tile_cols,
+            halo_mode=plan.halo_mode,
             interpret=self.config.interpret,
         )
         return dequantize(qres, fmt, dtype=x.dtype)

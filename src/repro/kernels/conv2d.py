@@ -16,20 +16,40 @@ same kernel covers stride ∈ {1, 2, 4, ...} without falling back to im2col.
 
 Spatial tiling (the paper's 𝒯/ℭ loop tiles, §III.B): when the whole image
 slab exceeds the VMEM budget, ``tile_rows`` adds an output-row tile axis to
-the grid.  Each grid step computes ``tile_rows`` output rows from a
-``stride·tile_rows``-row input block plus its *successor* block — the second
-block supplies the ``kh - stride`` halo rows a tap window reads past the
-tile boundary, while both operands stay ordinary blocked BlockSpecs (no
-unaligned slicing).  Legality: ``stride·tile_rows ≥ kh`` so one successor
-block always covers the halo.  The im2col + matmul fallback remains only for
-layers where no (τ, tile_rows) fits the VMEM budget — the routing decision
-lives in ``core/engine.py`` (DESIGN.md §2).
+the grid, in one of two halo regimes (DESIGN.md §2):
+
+* ``halo_mode="two_block"`` (PR 2, row tiling only): each grid step reads
+  the tile's ``stride·tile_rows``-row input block plus its *successor*
+  block as ordinary blocked BlockSpecs and concatenates them in-kernel —
+  the second block supplies the ``kh - stride`` halo rows a tap window
+  reads past the tile boundary.  Legality: ``stride·tile_rows ≥ kh`` so one
+  successor block always covers the halo.  Residency tax: ~2× the tile's
+  input rows live in VMEM, and every input block streams from HBM twice
+  (once as a tile, once as its predecessor's halo).
+
+* ``halo_mode="dma"``: the input stays an unblocked HBM/ANY operand and the
+  kernel issues an explicit async copy of *exactly* the window a tile
+  reads — ``stride·tile_rows + kh − stride`` input rows (and, when
+  ``tile_cols`` also tiles the width, ``stride·tile_cols + kw − stride``
+  columns) — into a double-buffered VMEM scratch; the next tile's window
+  prefetches while the current one computes.  No successor block, no
+  concat copy, no ``stride·tile_rows ≥ kh`` legality bound, and each input
+  byte streams from HBM once per τ-way plus the (kh−stride)-row overlap.
+  ``tile_cols`` adds the paper's ℭ column-tile axis so extreme-width
+  layers tile as (𝒯, ℭ) blocks instead of spilling to im2col.
+
+The im2col + matmul fallback remains only for layers where no
+(τ, tile_rows, tile_cols) fits the VMEM budget — the routing decision lives
+in ``core/engine.py`` (DESIGN.md §2).
 
 Both kernels fuse the layer epilogue (bias add, ReLU, and — float path —
 output quantization) into the accumulator write-back, so activations never
 round-trip through HBM between the GEMM and the nonlinearity (DESIGN.md §3).
 
-Grid: (N, ceil(Ho/tile_rows), Cout/τ); the middle axis is 1 when untiled.
+Grid: (N, ceil(Ho/tile_rows), Cout/τ) for the blocked regimes, with a
+ceil(Wo/tile_cols) axis inserted before the τ axis in the DMA regime; tile
+axes are 1 when untiled.  τ is the fastest axis so a DMA'd input window is
+fetched once and reused by every output-channel way.
 """
 from __future__ import annotations
 
@@ -71,6 +91,26 @@ def _split_refs(refs, halo, fused_bias):
     return x1, x2, w, b, o, acc
 
 
+def _float_epilogue(acc, b_ref, *, relu, qout):
+    """Fused bias/ReLU/fake-quant on the f32 accumulator (DESIGN.md §3)."""
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    if qout is not None:
+        acc = jnp.clip(jnp.round(acc * qout.scale) / qout.scale, qout.min_val, qout.max_val)
+    return acc
+
+
+def _q16_epilogue(acc, b_ref, *, relu, shift, bias_shift, raw_min, raw_max):
+    """Fused bias/ReLU/saturating-requantize on the i32 accumulator."""
+    if b_ref is not None:
+        acc = acc + (b_ref[...].astype(jnp.int32) << bias_shift)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return shift_saturate_i32(acc, shift, raw_min, raw_max)
+
+
 def _conv_kernel(*refs, kh, kw, th, wo, stride, relu, qout, halo, fused_bias):
     # refs: x1 (1, rows, Wp, Cin) image block; x2 same-shape successor block
     # (halo rows; only when spatially tiled); w (kh*kw*Cin, tau); optional
@@ -89,15 +129,161 @@ def _conv_kernel(*refs, kh, kw, th, wo, stride, relu, qout, halo, fused_bias):
             lhs = _tap_patch(img, i, j, th, wo, stride)
             rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :]
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
-    # fused epilogue on the f32 accumulator (DESIGN.md §3)
-    acc = acc_ref[...]
-    if b_ref is not None:
-        acc = acc + b_ref[...].astype(jnp.float32)
-    if relu:
-        acc = jnp.maximum(acc, 0.0)
-    if qout is not None:
-        acc = jnp.clip(jnp.round(acc * qout.scale) / qout.scale, qout.min_val, qout.max_val)
+    acc = _float_epilogue(acc_ref[...], b_ref, relu=relu, qout=qout)
     o_ref[...] = acc.reshape(1, th, wo, -1).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# manual-DMA halo regime (double-buffered (𝒯, ℭ) windows)
+# ---------------------------------------------------------------------------
+
+
+def _conv_dma_kernel(*refs, kh, kw, th, tw, stride, fixed_point, epilogue,
+                     fused_bias):
+    """(𝒯, ℭ)-tiled direct conv with a manual-DMA input halo.
+
+    The input operand lives in HBM (``memory_space=ANY``); each (r, c) tile
+    copies exactly its ``stride·th + kh − stride`` × ``stride·tw + kw −
+    stride`` input window into one slot of a double-buffered VMEM scratch.
+    The copy for tile k+1 is started on tile k's last τ-way, so the fetch
+    overlaps the K² tap GEMMs of the current tile (the classic
+    prefetch/compute pipeline); the τ axis is innermost, so each window is
+    DMA'd once and reused by every output-channel way.
+    """
+    refs = list(refs)
+    x_hbm = refs.pop(0)  # (N, Hp', Wp', Cin), unblocked, HBM-resident
+    w_ref = refs.pop(0)
+    b_ref = refs.pop(0) if fused_bias else None
+    o_ref, xs_ref, sem, acc_ref = refs
+    b = pl.program_id(0)
+    r = pl.program_id(1)
+    c = pl.program_id(2)
+    t = pl.program_id(3)
+    tiles_c = pl.num_programs(2)
+    ways = pl.num_programs(3)
+    tile = r * tiles_c + c
+    total = pl.num_programs(1) * tiles_c
+    rows_in, cols_in, cin = xs_ref.shape[1], xs_ref.shape[2], xs_ref.shape[3]
+
+    def fetch(tile_ix, slot):
+        rr = tile_ix // tiles_c
+        cc = tile_ix % tiles_c
+        return pltpu.make_async_copy(
+            x_hbm.at[
+                b,
+                pl.ds(rr * stride * th, rows_in),
+                pl.ds(cc * stride * tw, cols_in),
+                :,
+            ],
+            xs_ref.at[slot],
+            sem.at[slot],
+        )
+
+    # warm-up: the first tile of each image has no predecessor to prefetch it
+    @pl.when((tile == 0) & (t == 0))
+    def _():
+        fetch(tile, tile % 2).start()
+
+    # wait for this tile's window, once per tile (way 0)
+    @pl.when(t == 0)
+    def _():
+        fetch(tile, tile % 2).wait()
+
+    # prefetch the next tile's window into the other slot while computing
+    @pl.when((t == ways - 1) & (tile + 1 < total))
+    def _():
+        fetch(tile + 1, (tile + 1) % 2).start()
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    img = xs_ref[tile % 2]
+    for i in range(kh):
+        for j in range(kw):
+            lhs = _tap_patch(img, i, j, th, tw, stride)
+            rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :]
+            if fixed_point:
+                acc_ref[...] += jnp.dot(
+                    lhs.astype(jnp.int32), rhs.astype(jnp.int32),
+                    preferred_element_type=jnp.int32,
+                )
+            else:
+                acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.float32)
+    out = epilogue(acc_ref[...], b_ref)
+    o_ref[...] = out.reshape(1, th, tw, -1).astype(o_ref.dtype)
+
+
+def _conv_dma_call(
+    x, wmat, bias_row, *, kh, kw, stride, ho, wo, cout, tau, coutp,
+    tile_rows, tile_cols, fixed_point, epilogue, out_dtype, acc_dtype,
+    interpret,
+):
+    """Shared pallas_call plumbing for the DMA-halo regime (float + q16).
+
+    Pads x so every tile's DMA window is in-bounds (zero rows/cols past the
+    image contribute zero products, so ragged edges stay exact), pads the
+    output grid to whole tiles, and slices both back to (Ho, Wo, Cout).
+    """
+    n, h, wdt, cin = x.shape
+    th = tile_rows if 0 < tile_rows < ho else ho
+    tw = tile_cols if 0 < tile_cols < wo else wo
+    tiles_r = -(-ho // th)
+    tiles_c = -(-wo // tw)
+    rows_in = stride * th + kh - stride
+    cols_in = stride * tw + kw - stride
+    need_h = stride * th * (tiles_r - 1) + rows_in
+    need_w = stride * tw * (tiles_c - 1) + cols_in
+    if need_h > h or need_w > wdt:
+        x = jnp.pad(
+            x, ((0, 0), (0, max(0, need_h - h)), (0, max(0, need_w - wdt)), (0, 0))
+        )
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        pl.BlockSpec((kh * kw * cin, tau), lambda b, r, c, t: (0, t)),
+    ]
+    operands = [x, wmat]
+    if bias_row is not None:
+        operands.append(bias_row)
+        in_specs.append(pl.BlockSpec((1, tau), lambda b, r, c, t: (0, t)))
+    kernel = functools.partial(
+        _conv_dma_kernel, kh=kh, kw=kw, th=th, tw=tw, stride=stride,
+        fixed_point=fixed_point, epilogue=epilogue,
+        fused_bias=bias_row is not None,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, tiles_r, tiles_c, coutp // tau),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, th, tw, tau), lambda b, r, c, t: (b, r, c, t)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, tiles_r * th, tiles_c * tw, coutp), out_dtype
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2, rows_in, cols_in, cin), x.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((th * tw, tau), acc_dtype),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return out[:, :ho, :wo, :cout]
+
+
+def _halo_mode_for(tile_rows, tile_cols, ho, wo, halo_mode):
+    """Validate/normalize the halo regime for a (tile_rows, tile_cols) pair."""
+    row_tiled = 0 < tile_rows < ho
+    col_tiled = 0 < tile_cols < wo
+    if not (row_tiled or col_tiled):
+        return "untiled"
+    if col_tiled and halo_mode != "dma":
+        raise ValueError(
+            f"tile_cols={tile_cols} requires halo_mode='dma' (the two-block "
+            f"BlockSpec scheme only tiles output rows), got {halo_mode!r}"
+        )
+    if halo_mode == "dma":
+        return "dma"
+    if halo_mode in ("two_block", "none"):
+        # "none" is the untiled plans' sentinel; a tiled call with it keeps
+        # the legacy two-block behaviour for back-compat
+        return "two_block"
+    raise ValueError(f"unknown halo_mode {halo_mode!r}")
 
 
 def _conv_grid(x, kh, stride, ho, tile_rows):
@@ -134,7 +320,10 @@ def _conv_grid(x, kh, stride, ho, tile_rows):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "tau", "relu", "qout", "tile_rows", "interpret"),
+    static_argnames=(
+        "stride", "tau", "relu", "qout", "tile_rows", "tile_cols", "halo_mode",
+        "interpret",
+    ),
 )
 def conv2d_pallas(
     x: jax.Array,
@@ -146,14 +335,19 @@ def conv2d_pallas(
     relu: bool = False,
     qout: QFormat | None = None,
     tile_rows: int = 0,
+    tile_cols: int = 0,
+    halo_mode: str = "two_block",
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC VALID conv, any stride.  x: (N,H,W,Cin), w: (K,K,Cin,Cout).
 
     ``bias``: (Cout,) fused into the write-back; ``relu``/``qout``: fused
     nonlinearity and (fake-)quantization to a Q format, applied after bias.
-    ``tile_rows``: output rows per grid step (0 = whole image untiled); the
-    engine picks it so the working set fits VMEM (DESIGN.md §2).
+    ``tile_rows`` / ``tile_cols``: output rows/columns per grid step (0 =
+    untiled on that axis); ``halo_mode`` picks the tiled input regime —
+    "two_block" (blocked successor reads, rows only) or "dma" (exact-window
+    async copies, required for column tiling).  The engine picks all three
+    so the working set fits VMEM (DESIGN.md §2).
     """
     n, h, wdt, cin = x.shape
     kh, kw, cin2, cout = w.shape
@@ -167,6 +361,19 @@ def conv2d_pallas(
     # (kh*kw*cin, cout) with rows ordered (tap-major, cin-minor) to match the
     # kernel's per-tap row slices.
     wmat = w.reshape(kh * kw * cin, coutp)
+    if _halo_mode_for(tile_rows, tile_cols, ho, wo, halo_mode) == "dma":
+        bias_row = None
+        if bias is not None:
+            bias_row = jnp.pad(
+                bias.astype(jnp.float32), (0, coutp - cout)
+            ).reshape(1, coutp)
+        return _conv_dma_call(
+            x, wmat, bias_row, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo,
+            cout=cout, tau=tau, coutp=coutp, tile_rows=tile_rows,
+            tile_cols=tile_cols, fixed_point=False,
+            epilogue=functools.partial(_float_epilogue, relu=relu, qout=qout),
+            out_dtype=x.dtype, acc_dtype=jnp.float32, interpret=interpret,
+        )
     x, x_specs, tiles, th, halo = _conv_grid(x, kh, stride, ho, tile_rows)
     operands = [x] * (2 if halo else 1) + [wmat]
     in_specs = x_specs + [pl.BlockSpec((kh * kw * cin, tau), lambda b, r, t: (0, t))]
@@ -211,12 +418,10 @@ def _conv_q16_kernel(
             lhs = _tap_patch(img, i, j, th, wo, stride).astype(jnp.int32)
             rhs = w_ref[(i * kw + j) * cin : (i * kw + j + 1) * cin, :].astype(jnp.int32)
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.int32)
-    acc = acc_ref[...]
-    if b_ref is not None:
-        acc = acc + (b_ref[...].astype(jnp.int32) << bias_shift)
-    if relu:
-        acc = jnp.maximum(acc, 0)
-    out = shift_saturate_i32(acc, shift, raw_min, raw_max)
+    out = _q16_epilogue(
+        acc_ref[...], b_ref, relu=relu, shift=shift, bias_shift=bias_shift,
+        raw_min=raw_min, raw_max=raw_max,
+    )
     o_ref[...] = out.reshape(1, th, wo, -1)
 
 
@@ -224,7 +429,7 @@ def _conv_q16_kernel(
     jax.jit,
     static_argnames=(
         "stride", "tau", "relu", "fmt", "shift", "bias_shift", "tile_rows",
-        "interpret",
+        "tile_cols", "halo_mode", "interpret",
     ),
 )
 def conv2d_q16_pallas(
@@ -239,13 +444,16 @@ def conv2d_q16_pallas(
     shift: int | None = None,
     bias_shift: int | None = None,
     tile_rows: int = 0,
+    tile_cols: int = 0,
+    halo_mode: str = "two_block",
     interpret: bool = False,
 ) -> jax.Array:
     """Fixed-point NHWC VALID conv, any stride.  All tensors int16 raw Qm.n.
 
-    ``tile_rows`` spatially tiles the output rows exactly as in
-    :func:`conv2d_pallas`; zero-padded halo rows contribute zero products, so
-    tiled and untiled accumulations are bit-identical.  ``shift`` /
+    ``tile_rows`` / ``tile_cols`` / ``halo_mode`` tile the output exactly as
+    in :func:`conv2d_pallas`; zero-padded halo rows/columns contribute zero
+    products and integer accumulation is order-exact, so every tiling (and
+    both halo regimes) is bit-identical to the untiled kernel.  ``shift`` /
     ``bias_shift`` override the write-back scale gaps for mixed-format
     operands (default: same-format Qm.n semantics).
     """
@@ -260,6 +468,24 @@ def conv2d_q16_pallas(
     if coutp != cout:
         wq = jnp.pad(wq, ((0, 0), (0, 0), (0, 0), (0, coutp - cout)))
     wmat = wq.reshape(kh * kw * cin, coutp)
+    if _halo_mode_for(tile_rows, tile_cols, ho, wo, halo_mode) == "dma":
+        bias_row = None
+        if bias is not None:
+            bias_row = jnp.pad(
+                bias.astype(jnp.int16), (0, coutp - cout)
+            ).reshape(1, coutp)
+        epilogue = functools.partial(
+            _q16_epilogue, relu=relu,
+            shift=fmt.frac_bits if shift is None else shift,
+            bias_shift=fmt.frac_bits if bias_shift is None else bias_shift,
+            raw_min=fmt.raw_min, raw_max=fmt.raw_max,
+        )
+        return _conv_dma_call(
+            xq, wmat, bias_row, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo,
+            cout=cout, tau=tau, coutp=coutp, tile_rows=tile_rows,
+            tile_cols=tile_cols, fixed_point=True, epilogue=epilogue,
+            out_dtype=jnp.int16, acc_dtype=jnp.int32, interpret=interpret,
+        )
     xq, x_specs, tiles, th, halo = _conv_grid(xq, kh, stride, ho, tile_rows)
     operands = [xq] * (2 if halo else 1) + [wmat]
     in_specs = x_specs + [pl.BlockSpec((kh * kw * cin, tau), lambda b, r, t: (0, t))]

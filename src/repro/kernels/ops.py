@@ -140,25 +140,29 @@ def conv2d(
     route: str = "direct",
     block: MatmulBlock | None = None,
     tile_rows: int = 0,
+    tile_cols: int = 0,
+    halo_mode: str = "two_block",
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC conv on the unified compute unit, float path.
 
     route == "direct": the direct Pallas conv kernel — taps unrolled over the
     MXU, strided taps read strided slices of the resident image slab, and
-    ``tile_rows`` > 0 tiles the output rows with halo-aware input blocks so
-    oversized images stay on this route.
+    ``tile_rows`` / ``tile_cols`` > 0 tile the output (𝒯, ℭ) with
+    halo-aware input fetches (``halo_mode``: blocked two-block reads or
+    exact-window manual DMA) so oversized images stay on this route.
     route == "im2col": im2col + the Pallas matmul kernel — same unified-GEMM
-    semantics; used when no direct (τ, tile_rows) config fits the VMEM
-    budget (DESIGN.md §2).  Epilogue (bias/ReLU/quant) is fused on both
-    routes.
+    semantics; used when no direct (τ, tile_rows, tile_cols) config fits
+    the VMEM budget (DESIGN.md §2).  Epilogue (bias/ReLU/quant) is fused on
+    both routes.
     """
     if padding:
         x = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
     if route == "direct":
         return conv2d_pallas(
             x, w, bias, stride=stride, tau=tau, relu=relu, qout=qout,
-            tile_rows=tile_rows, interpret=interpret,
+            tile_rows=tile_rows, tile_cols=tile_cols, halo_mode=halo_mode,
+            interpret=interpret,
         )
     assert route == "im2col", route
     n = x.shape[0]
@@ -186,6 +190,8 @@ def conv2d_q16(
     route: str = "direct",
     block: MatmulBlock | None = None,
     tile_rows: int = 0,
+    tile_cols: int = 0,
+    halo_mode: str = "two_block",
     interpret: bool = False,
 ) -> jax.Array:
     """NHWC conv, fixed-point path.  All tensors int16 raw Qm.n; ``shift`` /
@@ -196,7 +202,7 @@ def conv2d_q16(
         return conv2d_q16_pallas(
             xq, wq, bias, stride=stride, tau=tau, relu=relu, fmt=fmt,
             shift=shift, bias_shift=bias_shift, tile_rows=tile_rows,
-            interpret=interpret,
+            tile_cols=tile_cols, halo_mode=halo_mode, interpret=interpret,
         )
     assert route == "im2col", route
     n = xq.shape[0]

@@ -156,11 +156,18 @@ class NetworkPlan:
         """
         lines = []
         for i, cp in enumerate(self.convs):
-            tiling = (
-                f"tiles={cp.spatial_tiles}x{cp.tile_rows}rows"
-                if cp.spatial_tiles > 1
-                else "untiled"
-            )
+            if cp.spatial_tiles > 1 or cp.col_tiles > 1:
+                # (𝒯, ℭ) tile grid, per-tile output dims, and halo regime,
+                # e.g. "tiles=2x4(256rx128c,dma)" or "tiles=4x1(8r,two_block)"
+                dims = f"{cp.tile_rows}r"
+                if cp.col_tiles > 1:
+                    dims += f"x{cp.tile_cols}c"
+                tiling = (
+                    f"tiles={cp.spatial_tiles}x{cp.col_tiles}"
+                    f"({dims},{cp.halo_mode})"
+                )
+            else:
+                tiling = "untiled"
             lines.append(
                 f"conv{i}: route={cp.route} tau={cp.tau} {tiling} "
                 f"vmem={cp.vmem_bytes / 2**20:.1f}MiB gemm={cp.gemm}"

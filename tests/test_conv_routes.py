@@ -3,9 +3,10 @@
 Property-based (hypothesis, or the conftest shim when it isn't installed):
 the conv geometry (H, W, Cin, Cout, K, stride, padding, relu, bias) is
 derived from a drawn seed so the suite sweeps every route — the untiled
-direct kernel, the new spatially-tiled direct cases, the im2col GEMM, and
-the xla lowering — and asserts they are bitwise-close in float and within
-quantization tolerance in q16 (DESIGN.md §2, ISSUE 2).
+direct kernel, the two-block row-tiled cases, the manual-DMA (𝒯, ℭ) tiled
+cases (ISSUE 8), the im2col GEMM, and the xla lowering — and asserts they
+are bitwise-close in float and within quantization tolerance in q16
+(DESIGN.md §2, ISSUE 2).
 """
 import dataclasses
 
@@ -51,6 +52,11 @@ def _tile_rows_for(k: int, stride: int, ho: int) -> int:
     return th if th < ho else 0
 
 
+def _dma_tiles_for(ho: int, wo: int) -> tuple[int, int]:
+    """A ragged-edged (𝒯, ℭ) tile for the DMA regime (no legality bound)."""
+    return max(1, ceil_div(ho, 3)), max(1, ceil_div(wo, 2))
+
+
 # ---------------------------------------------------------------------------
 # float: direct (untiled + tiled) == im2col == xla, bitwise-close
 # ---------------------------------------------------------------------------
@@ -70,6 +76,15 @@ def test_float_routes_agree(seed):
     th = _tile_rows_for(k, stride, ho)
     if th:
         outs["tiled"] = ops.conv2d(x, w, route="direct", tau=8, tile_rows=th, **kw)
+        outs["dma_rows"] = ops.conv2d(
+            x, w, route="direct", tau=8, tile_rows=th, halo_mode="dma", **kw
+        )
+    wo_ = (x.shape[2] + 2 * pad - k) // stride + 1
+    tr, tc = _dma_tiles_for(ho, wo_)
+    outs["dma_rc"] = ops.conv2d(
+        x, w, route="direct", tau=8, tile_rows=tr, tile_cols=tc,
+        halo_mode="dma", **kw
+    )
     eng = Engine(TemplateConfig(backend="xla"))
     outs["xla"] = eng.conv2d(x, w, stride=stride, padding=pad, bias=b, relu=relu)
     for name, out in outs.items():
@@ -101,6 +116,15 @@ def test_q16_routes_agree(seed):
     th = _tile_rows_for(k, stride, ho)
     if th:
         routes["tiled"] = ops.conv2d_q16(xq, wq, route="direct", tau=8, tile_rows=th, **kw)
+        routes["dma_rows"] = ops.conv2d_q16(
+            xq, wq, route="direct", tau=8, tile_rows=th, halo_mode="dma", **kw
+        )
+    wo_ = (x.shape[2] + 2 * pad - k) // stride + 1
+    tr, tc = _dma_tiles_for(ho, wo_)
+    routes["dma_rc"] = ops.conv2d_q16(
+        xq, wq, route="direct", tau=8, tile_rows=tr, tile_cols=tc,
+        halo_mode="dma", **kw
+    )
     for name, out in routes.items():
         # all q16 routes accumulate exactly in int32 -> bit-identical raw
         np.testing.assert_array_equal(
@@ -148,7 +172,9 @@ def test_oversized_layer_tiles_and_matches_im2col(stride, pad):
         )
         assert untiled > budget, backend  # it really was oversized
         assert plan.route == "direct", backend
-        assert plan.spatial_tiles >= 2 and plan.tile_rows > 0
+        assert plan.spatial_tiles >= 2 or plan.col_tiles >= 2
+        assert plan.tile_rows > 0 or plan.tile_cols > 0
+        assert plan.halo_mode in ("two_block", "dma")
         assert plan.vmem_bytes <= budget
         p_gemm = eng.plan_conv(x.shape, w.shape, stride=stride, padding=pad, route="im2col")
         out_t = eng.conv2d(x, w, stride=stride, padding=pad, bias=b, relu=True, plan=plan)
@@ -165,6 +191,9 @@ def test_acceptance_shape_plans_tiled_direct_on_default_hw():
     assert untiled > eng.config.hw.vmem_bytes
     assert plan.route == "direct"
     assert plan.spatial_tiles >= 2
+    # ISSUE 8 acceptance: the extreme-width shape tiles as (𝒯, ℭ) blocks
+    # under the manual-DMA halo — no im2col fallback, a real column tile
+    assert plan.halo_mode == "dma" and plan.col_tiles >= 2 and plan.tile_cols > 0
     assert plan.vmem_bytes <= eng.config.hw.vmem_bytes
     # the whole VGG16 stack at 512x512 now stays on the direct route
     from repro.core.template import default_template
@@ -206,7 +235,7 @@ def test_forced_fallback_boundary():
     eng_at = Engine(TemplateConfig(backend="pallas", interpret=True, hw=at))
     plan_at = eng_at.plan_conv(x_shape, w_shape)
     assert plan_at.route == "direct" and plan_at.vmem_bytes == vmin
-    assert plan_at.spatial_tiles >= 2
+    assert plan_at.spatial_tiles >= 2 or plan_at.col_tiles >= 2
     # both sides of the boundary compute the same numbers
     kx = jax.random.fold_in(KEY, 11)
     x = jax.random.normal(kx, x_shape) * 0.25
@@ -251,3 +280,73 @@ def test_tile_rows_too_small_raises():
     w = jnp.zeros((5, 5, 4, 8))
     with pytest.raises(ValueError, match="tap window"):
         ops.conv2d(x, w, tile_rows=2, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# manual-DMA halo regime (ISSUE 8): (𝒯, ℭ) tiles vs oracle, both dtypes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+@pytest.mark.parametrize("tile", [(3, 0), (0, 4), (5, 3), (2, 2)])
+def test_dma_halo_conv_vs_ref_sweep(stride, tile):
+    """DMA-halo row/column/joint tiling with ragged edges matches the oracle.
+
+    (2, 2) with stride 1 and k=3 is *illegal* under the two-block scheme
+    (stride·tile_rows < kh) but fine under DMA — the fetched window always
+    covers the tap extent, so the legality bound is gone.
+    """
+    tr, tc = tile
+    kx = jax.random.fold_in(KEY, 17 + stride)
+    x = jax.random.normal(kx, (2, 15, 13, 4)) * 0.25
+    w = jax.random.normal(jax.random.fold_in(kx, 1), (3, 3, 4, 10)) * 0.25
+    b = jax.random.normal(jax.random.fold_in(kx, 2), (10,)) * 0.1
+    out = ops.conv2d(
+        x, w, bias=b, stride=stride, padding=1, tau=8, relu=True,
+        tile_rows=tr, tile_cols=tc, halo_mode="dma", interpret=True,
+    )
+    want = ref.conv2d_fused_ref(x, w, b, stride=stride, padding=1, relu=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+    xq, wq, bq = quantize(x), quantize(w), quantize(b)
+    outq = ops.conv2d_q16(
+        xq, wq, bias=bq, stride=stride, padding=1, tau=8, relu=True,
+        tile_rows=tr, tile_cols=tc, halo_mode="dma", interpret=True,
+    )
+    wantq = ref.conv2d_q16_ref(xq, wq, bq, stride=stride, padding=1, relu=True)
+    np.testing.assert_array_equal(np.asarray(outq), np.asarray(wantq))
+
+
+def test_column_tiling_requires_dma():
+    """tile_cols under the two-block BlockSpec scheme is a loud error."""
+    x = jnp.zeros((1, 16, 16, 4))
+    w = jnp.zeros((3, 3, 4, 8))
+    with pytest.raises(ValueError, match="dma"):
+        ops.conv2d(x, w, tile_rows=4, tile_cols=4, interpret=True)
+
+
+def test_dma_tile_smaller_than_tap_window_works():
+    """The two-block legality bound does not apply to the DMA regime."""
+    kx = jax.random.fold_in(KEY, 23)
+    x = jax.random.normal(kx, (1, 16, 16, 4)) * 0.25
+    w = jax.random.normal(jax.random.fold_in(kx, 1), (5, 5, 4, 8)) * 0.25
+    out = ops.conv2d(
+        x, w, stride=1, tau=8, tile_rows=2, tile_cols=3, halo_mode="dma",
+        interpret=True,
+    )
+    want = ref.conv2d_fused_ref(x, w, None, stride=1, padding=0, relu=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_divisor_tile_ladder_offers_exact_tilings():
+    """ISSUE 8 satellite: the ladder enumerates non-power-of-two divisors of
+    the extent, so shapes like Ho=27 can tile exactly (9·3) instead of only
+    via ragged halvings (27→14→7)."""
+    assert 9 in dse._tile_ladder(27, 1) and 3 in dse._tile_ladder(27, 1)
+    assert 5 in dse._tile_ladder(15, 1)
+    assert dse._tile_ladder(8, 1) == [8, 4, 2, 1]
+    # and the explored configs include an exact non-power-of-two tiling
+    ranked = dse.explore_conv_spatial(
+        29, 29, 8, 3, 3, 27, 27, 8, 1,
+        dataclasses.replace(TPU_V5E, vmem_bytes=64 * 1024), 4, top=1000,
+    )
+    assert any(c.tile_rows == 9 and c.halo_mode == "dma" for c in ranked)
