@@ -192,6 +192,79 @@ def spatial_tiling_row() -> dict:
     }
 
 
+def spatial_shard_row(shards: int = 4) -> dict:
+    """Cross-chip spatial (H-slab) sharding row, as JSON (DESIGN.md §10).
+
+    Structural: for every VGG16 @ 224² conv/pool seam under ``shards`` H
+    slabs, the modeled bytes the halo exchange moves between neighbor shards
+    — ``(S−1)·(up+dn)·N·W·C`` per seam, the ``kh − stride`` rows of the
+    paper's dependency analysis — versus the full-activation ring all-gather
+    it replaces (``(S−1)·N·H·W·C`` per conv).  The gate is *strict*: every
+    seam must exchange fewer bytes than the gather, and the network total
+    must come out at least an order of magnitude smaller.  Numeric: the
+    grid-resident q16 LeNet forward over 2 slabs must be **bit-identical**
+    to the unsharded route (the repo's signature invariant — contraction
+    dims never cross a shard boundary).
+    """
+    from repro.core.quantization import NumericsPolicy
+    from repro.core.template import default_template
+    from repro.models.cnn import (CNN_ZOO, LENET, cnn_forward, init_cnn,
+                                  plan_cnn, quantize_cnn_params)
+    from repro.parallel.sharding import spatial_gather_bytes, spatial_halo_bytes
+
+    spec = CNN_ZOO["vgg16"]
+    n, itemsize = 1, 2  # q16 activation plane
+    tpl = default_template("pallas")
+    plan = plan_cnn(tpl, spec, (n, 224, 224, spec.input_ch), spatial=shards)
+    hh, ww, ch = 224, 224, spec.input_ch
+    layers = []
+    halo_total = gather_total = 0
+    for i, ((cout, k, stride, pad, pool), cp, ph) in enumerate(
+        zip(spec.convs, plan.convs, plan.pool_halos)
+    ):
+        hs = cp.halo
+        halo = spatial_halo_bytes(hs, n, ww, ch, itemsize)
+        gather = spatial_gather_bytes(hh, n, ww, ch, shards, itemsize)
+        hh = (hh + 2 * pad - k) // stride + 1
+        ww = (ww + 2 * pad - k) // stride + 1
+        ch = cout
+        if pool:
+            halo += spatial_halo_bytes(ph, n, ww, ch, itemsize)
+            hh //= pool
+            ww //= pool
+        layers.append({
+            "layer": f"conv{i}", "halo_bytes": halo, "gather_bytes": gather,
+            "ratio": round(halo / gather, 4),
+        })
+        halo_total += halo
+        gather_total += gather
+    # numeric differential: 2-slab grid-resident q16 LeNet, bitwise
+    tq = default_template("q16")
+    params = init_cnn(jax.random.PRNGKey(0), LENET)
+    policy = NumericsPolicy("q16")
+    qp = quantize_cnn_params(tq, LENET, params, policy)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 1)) * 0.5
+    ref = cnn_forward(tq, LENET, qp, x, policy=policy)
+    sp = plan_cnn(tq, LENET, x.shape, spatial=2)
+    got = cnn_forward(tq, LENET, qp, x, policy=policy, plan=sp)
+    return {
+        "bench": "spatial_shard_halo_exchange",
+        "net": "vgg16@224",
+        "shards": shards,
+        "halo_MiB_total": round(halo_total / 2**20, 2),
+        "gather_MiB_total": round(gather_total / 2**20, 2),
+        "bytes_ratio_halo_over_gather": round(halo_total / gather_total, 4),
+        "per_layer_max_ratio": max(l["ratio"] for l in layers),
+        "all_layers_halo_below_gather": all(
+            l["halo_bytes"] < l["gather_bytes"] for l in layers
+        ),
+        "layers": layers[:3] + layers[-1:],  # head + tail, keep the row short
+        "lenet_q16_2shard_bitwise": bool(
+            np.array_equal(np.asarray(got), np.asarray(ref))
+        ),
+    }
+
+
 def plan_store_warm_start_row() -> dict:
     """Cold-vs-warm plan time through a persisted store, as JSON.
 
@@ -493,6 +566,16 @@ def main():
     assert frow["killed"] == 1 and frow["restarted"] == 1
     assert frow["requeued_sessions"] > 0, \
         "the kill must catch in-flight sessions for the row to mean anything"
+    print("\n== spatial H-slab sharding: halo vs gather bytes (JSON) ==")
+    srow = spatial_shard_row()
+    print(json.dumps(srow))
+    assert srow["all_layers_halo_below_gather"], \
+        "a layer's halo exchange moved >= the full-activation gather"
+    assert srow["per_layer_max_ratio"] < 1.0
+    assert srow["bytes_ratio_halo_over_gather"] < 0.1, \
+        "network-total halo traffic should be an order below the gather"
+    assert srow["lenet_q16_2shard_bitwise"], \
+        "spatially-sharded q16 forward diverged bitwise from unsharded"
     print("\n== VGG16 @ 512x512 network plan (route/tile regressions diff here) ==")
     from repro.core.template import default_template
     from repro.models.cnn import CNN_ZOO, plan_cnn

@@ -694,6 +694,11 @@ class ConvPlan:
     halo_mode: tiled-input regime — "none" (untiled), "two_block" (blocked
         successor reads), or "dma" (exact-window async copies); see
         kernels/conv2d.py and DESIGN.md §2.
+    halo: cross-chip spatial-sharding seam (a ``SpatialHalo``, DESIGN.md
+        §10) — when set, the layer executes per H slab in the slab-major
+        (S, N, lx, W, C) layout via :meth:`Engine._conv2d_spatial`; ``pad``
+        is then 0 (the halo exchange's zero fill *is* the H padding, and
+        the executor pre-pads W by ``halo.pad``).
     """
 
     route: str
@@ -708,6 +713,7 @@ class ConvPlan:
     tile_cols: int = 0
     col_tiles: int = 1
     halo_mode: str = "none"
+    halo: Optional[object] = None  # SpatialHalo (kept untyped: lazy import)
 
 
 #: VMEM working-set model of one direct-conv grid step — lives with the rest
@@ -778,6 +784,25 @@ class Engine:
             return clamp_block(m, n, k, self.config.block, self.config.hw)
         return self.plan_cache.block_for(m, n, k, self.config.hw)
 
+    @staticmethod
+    def _active_mesh():
+        from repro.parallel.sharding import active_mesh
+
+        return active_mesh()
+
+    def _adhoc_block(self, m: int, n: int, k: int) -> MatmulBlock:
+        """Block for a *plan-less* GEMM dispatch: localize (m, n, k) under an
+        active :func:`use_mesh` context first (ISSUE 9) — an ad-hoc call
+        inside a mesh otherwise plans at the global shape, which
+        ``plan_gemm(mesh=...)`` never executes, so a store warmed through
+        the planner reports spurious misses for the very same layer."""
+        mesh = self._active_mesh()
+        if mesh is not None:
+            from repro.parallel.sharding import local_gemm_shape
+
+            m, n, k = local_gemm_shape(m, n, k, mesh=mesh)
+        return self.block_for(m, n, k)
+
     def measure_and_pin(self, m: int, n: int, k: int, **kw) -> MatmulBlock:
         """Measured-time autotune for this engine's hardware spec — times the
         top-K analytic candidates and pins the winner in the registry."""
@@ -825,7 +850,7 @@ class Engine:
 
     def plan_conv(
         self, x_shape, w_shape, *, stride: int = 1, padding=0,
-        route: Optional[str] = None, mesh=None, partition=None,
+        route: Optional[str] = None, mesh=None, partition=None, spatial=None,
     ) -> ConvPlan:
         """Pick the kernel route for one conv layer (DESIGN.md §2).
 
@@ -839,7 +864,30 @@ class Engine:
         with a plan-cached DSE block.  ``route`` forces a route (tests /
         benchmarks).  With ``mesh`` the *local* shard of the layer is planned:
         batch over the partition's M axes, output channels over its N axes.
+
+        ``spatial`` (a shard count, mesh axis name, or pre-chained
+        :class:`SpatialHalo`) plans the cross-chip H-slab partition instead
+        (DESIGN.md §10): the per-shard kernel runs at the halo-augmented
+        ``win``-row window with padding folded into the exchange's zero fill,
+        and the returned plan carries the seam in ``plan.halo`` — batch and
+        Cout then stay shard-local, so ``partition`` does not apply.
         """
+        if spatial is not None:
+            from repro.parallel.sharding import (SpatialHalo,
+                                                 plan_spatial_halo,
+                                                 spatial_shards)
+
+            n, h, wd, cin = x_shape
+            kh = w_shape[0]
+            pad = _resolve_pad(padding, kh)
+            hs = spatial if isinstance(spatial, SpatialHalo) else plan_spatial_halo(
+                h, kh, stride, pad, *spatial_shards(spatial, mesh)
+            )
+            inner = self.plan_conv(
+                (n, hs.win, wd + 2 * pad, cin), w_shape,
+                stride=stride, padding=0, route=route,
+            )
+            return dataclasses.replace(inner, halo=hs)
         if mesh is not None:
             from repro.parallel.sharding import local_conv_shapes
 
@@ -1071,7 +1119,7 @@ class Engine:
         block = (
             plan.block
             if plan is not None and plan.block is not None
-            else self.block_for(m, n, k)
+            else self._adhoc_block(m, n, k)
         )
         out = kops.matmul_q16(
             x2.raw, w.raw, bias=b_raw, relu=relu, fmt=out_fmt,
@@ -1101,8 +1149,17 @@ class Engine:
         x = self._quant_operand(x)
         w = self._quant_operand(w)
         out_fmt = out_fmt or x.fmt  # same grid-following rule as _qmatmul
+        if plan is not None and plan.halo is not None:
+            return self._conv2d_spatial(
+                x, w, bias=bias, relu=relu, qout=out_fmt, plan=plan
+            )
         if plan is None:
-            plan = self.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
+            # ad-hoc dispatch inside use_mesh plans the *local* shard shape,
+            # matching plan_conv(mesh=...) warmups (ISSUE 9)
+            plan = self.plan_conv(
+                x.shape, w.shape, stride=stride, padding=padding,
+                mesh=self._active_mesh(),
+            )
         if plan.route == "xla":
             raise ValueError("grid-resident conv has no xla route (q16 only)")
         stride, pad = plan.stride, plan.pad
@@ -1174,7 +1231,7 @@ class Engine:
             from repro.kernels import ops as kops
 
             self.counters["gemm_pallas"] += 1
-            block = plan.block if plan is not None and plan.block is not None else self.block_for(m, n, k)
+            block = plan.block if plan is not None and plan.block is not None else self._adhoc_block(m, n, k)
             out = kops.matmul_fp(
                 x2, w, bias=bias, relu=relu, qout=qout, block=block,
                 interpret=self.config.interpret,
@@ -1190,7 +1247,7 @@ class Engine:
             self.counters["quantize_calls"] += 2 if bias is None else 3
             self.counters["dequantize_calls"] += 1
             fmt = self.config.qformat
-            block = plan.block if plan is not None and plan.block is not None else self.block_for(m, n, k)
+            block = plan.block if plan is not None and plan.block is not None else self._adhoc_block(m, n, k)
             qres = kops.matmul_q16(
                 quantize(x2, fmt),
                 quantize(w, fmt),
@@ -1241,6 +1298,10 @@ class Engine:
         """
         from repro.kernels import ops as kops
 
+        if plan is not None and plan.halo is not None and not isinstance(x, QTensor):
+            return self._conv2d_spatial(
+                x, w, bias=bias, relu=relu, qout=qout, plan=plan
+            )
         if isinstance(x, QTensor) or isinstance(w, QTensor):
             return self._qconv2d(
                 x, w, stride=stride, padding=padding, bias=bias, relu=relu,
@@ -1248,7 +1309,12 @@ class Engine:
             )
         kh, kw = w.shape[0], w.shape[1]
         if plan is None:
-            plan = self.plan_conv(x.shape, w.shape, stride=stride, padding=padding)
+            # ad-hoc dispatch inside use_mesh plans the *local* shard shape,
+            # matching plan_conv(mesh=...) warmups (ISSUE 9)
+            plan = self.plan_conv(
+                x.shape, w.shape, stride=stride, padding=padding,
+                mesh=self._active_mesh(),
+            )
         # The plan is the single source of geometry: stride *and* pad both
         # come from it, so a mismatched plan cannot half-apply.
         stride, pad = plan.stride, plan.pad
@@ -1293,3 +1359,41 @@ class Engine:
             interpret=self.config.interpret,
         )
         return dequantize(qres, fmt, dtype=x.dtype)
+
+    def _conv2d_spatial(self, x, w, *, bias, relu, qout, plan: ConvPlan):
+        """One spatially-sharded conv seam (DESIGN.md §10).
+
+        ``x`` is slab-major (S, N, lx, W, C) — float array or QTensor —
+        with the slab dim (optionally) sharded over ``plan.halo.axis``.
+        Exchange the halo rows with the neighbor shards, pre-pad W by the
+        conv's ``pad`` (H zeros already came from the exchange's edge
+        fill), fold slabs into the batch dim for the planned per-shard
+        kernel, then restore the slab layout — masking the ragged tail
+        shard's invalid rows back to zero so the *next* seam's halo reads
+        stay exact.  Contraction dims never cross a shard boundary, so the
+        result is bit-identical to the unsharded kernel per output row.
+        """
+        from repro.parallel import sharding as sh
+
+        hs = plan.halo
+        inner = dataclasses.replace(plan, halo=None)
+        self.counters["conv_spatial"] += 1
+        quant = isinstance(x, QTensor)
+        v = x.raw if quant else x
+        v = sh.constrain_slabs(v, hs.axis)
+        ext = sh.halo_exchange(v, hs)  # (S, N, win, W, C)
+        if hs.pad:
+            ext = jnp.pad(
+                ext, ((0, 0), (0, 0), (0, 0), (hs.pad, hs.pad), (0, 0))
+            )
+        s, n = ext.shape[0], ext.shape[1]
+        flat = ext.reshape(s * n, *ext.shape[2:])
+        out = self.conv2d(
+            QTensor(flat, x.fmt) if quant else flat, w,
+            bias=bias, relu=relu, qout=qout, plan=inner,
+        )
+        qres = isinstance(out, QTensor)
+        ov = out.raw if qres else out
+        ov = ov.reshape(s, n, *ov.shape[1:])
+        ov = sh.constrain_slabs(sh.mask_slab_rows(ov, hs), hs.axis)
+        return QTensor(ov, out.fmt) if qres else ov

@@ -111,6 +111,64 @@ def _maxpool(x, w: int):
     )
 
 
+# -- spatial (H-slab) sharding helpers (DESIGN.md §10) -----------------------
+
+
+def _on_raw(x, f):
+    """Apply ``f`` to a float array or to a QTensor's int16 raws (layout ops
+    are grid-transparent)."""
+    return QTensor(f(x.raw), x.fmt) if isinstance(x, QTensor) else f(x)
+
+
+def _to_slabs(x, shards: int):
+    """NHWC -> slab-major (S, N, lx, W, C) with ``lx = ceil(H / S)`` and a
+    zero tail — the layout every spatial op preserves (buffer row ``r`` of
+    slab ``s`` holds global row ``s·lx + r``, zero beyond H)."""
+
+    def f(v):
+        n, h, w, c = v.shape
+        lx = -(-h // shards)
+        vp = jnp.pad(v, ((0, 0), (0, shards * lx - h), (0, 0), (0, 0)))
+        return jnp.moveaxis(vp.reshape(n, shards, lx, w, c), 1, 0)
+
+    return _on_raw(x, f)
+
+
+def _gather_slabs(x, h: int):
+    """Slab-major (S, N, l, W, C) -> NHWC (N, h, W, C): the conv→FC flatten
+    seam.  Correct even for a ragged tail shard by the slab invariant — the
+    buffer rows past the global extent are zeros and land past row ``h``."""
+
+    def f(v):
+        s, n, l = v.shape[0], v.shape[1], v.shape[2]
+        return jnp.moveaxis(v, 0, 1).reshape(n, s * l, *v.shape[3:])[:, :h]
+
+    return _on_raw(x, f)
+
+
+def _maxpool_spatial(x, w: int, ph):
+    """Spatially-sharded max pool: a pool is just a halo op with ``kh = w``,
+    ``stride = w``, ``pad = 0`` — exchange the (up, dn) rows the seam needs,
+    pool each shard's window, and re-zero the ragged tail rows so the next
+    seam's halo reads stay exact."""
+    from repro.parallel import sharding as sh
+
+    def f(v):
+        v = sh.constrain_slabs(v, ph.axis)
+        ext = sh.halo_exchange(v, ph)  # (S, N, win, W, C)
+        init = (
+            jnp.array(jnp.iinfo(v.dtype).min, v.dtype)
+            if jnp.issubdtype(v.dtype, jnp.integer)
+            else jnp.array(-jnp.inf, v.dtype)
+        )
+        out = jax.lax.reduce_window(
+            ext, init, jax.lax.max, (1, 1, w, w, 1), (1, 1, w, w, 1), "VALID"
+        )
+        return sh.constrain_slabs(sh.mask_slab_rows(out, ph), ph.axis)
+
+    return _on_raw(x, f)
+
+
 def init_cnn(key, spec: CNNSpec, dtype=jnp.float32, scale: float = 0.5):
     """He-style init, scaled into the Q2.14 representable range [-2, 2)."""
     params = {"convs": [], "fcs": []}
@@ -146,6 +204,11 @@ class NetworkPlan:
 
     convs: tuple  # ConvPlan per conv stage
     fcs: tuple  # GemmPlan per FC layer
+    # spatial (H-slab) sharding, DESIGN.md §10 — shards == 1 means unsharded
+    spatial: int = 1  # H-slab shard count S
+    spatial_axis: Optional[str] = None  # mesh axis the slab dim shards over
+    pool_halos: tuple = ()  # per conv stage: SpatialHalo of its pool, or None
+    feat_h: int = 0  # global H entering the conv→FC flatten gather
 
     def describe(self) -> list[str]:
         """One line per layer: route, τ, spatial tiles, modeled VMEM.
@@ -168,9 +231,15 @@ class NetworkPlan:
                 )
             else:
                 tiling = "untiled"
+            halo = ""
+            if cp.halo is not None:
+                halo = (
+                    f" halo=S{cp.halo.shards}"
+                    f"(up{cp.halo.up},dn{cp.halo.dn},win{cp.halo.win})"
+                )
             lines.append(
                 f"conv{i}: route={cp.route} tau={cp.tau} {tiling} "
-                f"vmem={cp.vmem_bytes / 2**20:.1f}MiB gemm={cp.gemm}"
+                f"vmem={cp.vmem_bytes / 2**20:.1f}MiB gemm={cp.gemm}{halo}"
             )
         for i, gp in enumerate(self.fcs):
             blk = (gp.block.bm, gp.block.bn, gp.block.bk) if gp.block else None
@@ -190,6 +259,7 @@ def plan_cnn(
     force_route: Optional[str] = None,
     mesh=None,
     partition=None,
+    spatial=None,
 ) -> NetworkPlan:
     """Compile the network's kernel routes and Pallas blocks once.
 
@@ -201,19 +271,74 @@ def plan_cnn(
     per-shard shape (batch over the partition's M axes, output channels /
     FC widths over its N axes); the inter-layer geometry stays logical since
     activations are gathered between layers.
+
+    ``spatial`` (a shard count or mesh axis name) plans the cross-chip
+    H-slab partition instead (DESIGN.md §10): every conv and pool is planned
+    at its halo-augmented local slab (the seams chain — each layer's slab
+    layout is the previous layer's per-shard output rows), batch and Cout
+    stay shard-local, and the FCs are planned at the logical shape (the
+    flatten seam gathers the slabs, so ``mesh``/``partition`` do not apply
+    to spatial plans).
     """
+    spatial_n, spatial_ax = 1, None
+    if spatial is not None:
+        from repro.parallel.sharding import spatial_shards
+
+        spatial_n, spatial_ax = spatial_shards(spatial, mesh)
     mesh_key = None
     if mesh is not None:
         mesh_key = (
             tuple((a, mesh.shape[a]) for a in mesh.axis_names),
             partition,
         )
-    key = (tpl.config, spec, tuple(input_shape), force_route, mesh_key)
+    key = (
+        tpl.config, spec, tuple(input_shape), force_route, mesh_key,
+        (spatial_n, spatial_ax),
+    )
     plan = _NETWORK_PLANS.get(key)
     if plan is not None:
         return plan
     eng = tpl.engine
     n, hh, ww, ch = input_shape
+    if spatial_n > 1:
+        from repro.parallel.sharding import plan_spatial_halo
+
+        lx = -(-hh // spatial_n)  # the _to_slabs layout of the input
+        convs, pool_halos = [], []
+        for cout, k, stride, pad, pool in spec.convs:
+            hs = plan_spatial_halo(
+                hh, k, stride, pad, spatial_n, axis=spatial_ax, lx=lx
+            )
+            cp = eng.plan_conv(
+                (n, hh, ww, ch), (k, k, ch, cout), stride=stride,
+                padding=pad, route=force_route, spatial=hs,
+            )
+            convs.append(cp)
+            lx = hs.lo
+            hh = (hh + 2 * pad - k) // stride + 1
+            ww = (ww + 2 * pad - k) // stride + 1
+            if pool:
+                ph = plan_spatial_halo(
+                    hh, pool, pool, 0, spatial_n, axis=spatial_ax, lx=lx
+                )
+                pool_halos.append(ph)
+                lx = ph.lo
+                hh //= pool
+                ww //= pool
+            else:
+                pool_halos.append(None)
+            ch = cout
+        fan = hh * ww * ch
+        fcs = []
+        for wd in (*spec.fcs, spec.n_classes):
+            fcs.append(eng.plan_gemm(n, wd, fan))
+            fan = wd
+        plan = NetworkPlan(
+            convs=tuple(convs), fcs=tuple(fcs), spatial=spatial_n,
+            spatial_axis=spatial_ax, pool_halos=tuple(pool_halos), feat_h=hh,
+        )
+        _NETWORK_PLANS[key] = plan
+        return plan
     convs = []
     for cout, k, stride, pad, pool in spec.convs:
         cp = eng.plan_conv(
@@ -322,14 +447,19 @@ def cnn_forward(
     ):
         eng = tpl.engine
         plan = plan or plan_cnn(tpl, spec, x.shape)
+        halos = plan.pool_halos or (None,) * len(plan.convs)
         h = eng.quant(x, policy.fmt)
-        for p, (cout, k, stride, pad, pool), cp in zip(
-            params["convs"], spec.convs, plan.convs
+        if plan.spatial > 1:
+            h = _to_slabs(h, plan.spatial)
+        for p, (cout, k, stride, pad, pool), cp, ph in zip(
+            params["convs"], spec.convs, plan.convs, halos
         ):
             h = tpl.conv2d(h, p["w"], stride=stride, padding=pad,
                            bias=p["b"], relu=True, plan=cp)
             if pool:
-                h = _maxpool(h, pool)
+                h = _maxpool_spatial(h, pool, ph) if ph is not None else _maxpool(h, pool)
+        if plan.spatial > 1:
+            h = _gather_slabs(h, plan.feat_h)
         h = h.reshape(h.shape[0], -1)
         last = len(params["fcs"]) - 1
         for i, (p, gp) in enumerate(zip(params["fcs"], plan.fcs)):
@@ -341,18 +471,23 @@ def cnn_forward(
                 h = tpl.linear(h, p["w"], p["b"], wide=True, plan=gp)
         return h
     plan = plan or plan_cnn(tpl, spec, x.shape)
+    halos = plan.pool_halos or (None,) * len(plan.convs)
     fq = (lambda a: fake_quant_fmt(a, fmt)) if quantized else (lambda a: a)
     qo = fmt if quantized else None
     h = fq(x)
-    for p, (cout, k, stride, pad, pool), cp in zip(
-        params["convs"], spec.convs, plan.convs
+    if plan.spatial > 1:
+        h = _to_slabs(h, plan.spatial)
+    for p, (cout, k, stride, pad, pool), cp, ph in zip(
+        params["convs"], spec.convs, plan.convs, halos
     ):
         h = tpl.conv2d(
             h, fq(p["w"]), stride=stride, padding=pad,
             bias=fq(p["b"]), relu=True, qout=qo, plan=cp,
         )
         if pool:
-            h = _maxpool(h, pool)
+            h = _maxpool_spatial(h, pool, ph) if ph is not None else _maxpool(h, pool)
+    if plan.spatial > 1:
+        h = _gather_slabs(h, plan.feat_h)
     h = h.reshape(h.shape[0], -1)
     last = len(params["fcs"]) - 1
     for i, (p, gp) in enumerate(zip(params["fcs"], plan.fcs)):

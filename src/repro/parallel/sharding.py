@@ -22,6 +22,7 @@ import threading
 from typing import Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "TRAIN_RULES",
     "SERVE_RULES",
     "DECODE_RULES",
+    "SpatialHalo",
     "column_parallel_shardings",
     "use_mesh",
     "active_mesh",
@@ -38,8 +40,14 @@ __all__ = [
     "local_conv_shapes",
     "logical_to_spec",
     "constrain",
+    "constrain_slabs",
     "named_sharding",
     "tree_shardings",
+    "plan_spatial_halo",
+    "spatial_shards",
+    "halo_exchange",
+    "spatial_halo_bytes",
+    "spatial_gather_bytes",
 ]
 
 MeshAxes = Union[str, tuple, None]
@@ -229,13 +237,19 @@ def axis_size(mesh, axes: MeshAxes) -> int:
 
 
 def local_dim(dim: int, mesh, axes: MeshAxes) -> int:
-    """Per-shard extent of ``dim`` sharded over ``axes`` (ceil-div: GSPMD
-    pads the ragged tail shard).  Dims smaller than the shard count stay
-    replicated — the same drop rule :func:`logical_to_spec` applies."""
+    """Per-shard extent of ``dim`` sharded over ``axes``.
+
+    One drop rule, shared with :func:`logical_to_spec` (ISSUE 9): a dim
+    that does not divide the shard count stays **replicated** (returns
+    ``dim``), because the param/jit-boundary shardings built by
+    :func:`tree_shardings`/:func:`column_parallel_shardings` drop exactly
+    those mappings — a planner that ceil-divided here would plan a local
+    Cout/batch shape that never executes.
+    """
     s = axis_size(mesh, axes)
-    if s <= 1 or dim < s:
+    if s <= 1 or dim < s or dim % s:
         return dim
-    return -(-dim // s)
+    return dim // s
 
 
 def _resolve_partition(mesh, partition):
@@ -262,22 +276,236 @@ def local_gemm_shape(m: int, n: int, k: int, *, mesh, partition=None) -> tuple:
     )
 
 
-def local_conv_shapes(x_shape, w_shape, *, mesh, partition=None):
+def local_conv_shapes(x_shape, w_shape, *, mesh, partition=None,
+                      spatial=None, stride: int = 1, padding: int = 0):
     """Per-shard (NHWC x, KKIO w) of a conv layer under a mesh partition.
 
-    The conv's GEMM M scales with batch and its N is Cout, so the same
-    (M, N) partition applies: batch over the M axes, output channels over
-    the N axes; spatial dims and Cin stay shard-local (the layer's input
-    activations are gathered over channels between layers).
+    Default (batch/Cout) mode: the conv's GEMM M scales with batch and its
+    N is Cout, so the same (M, N) partition applies: batch over the M axes,
+    output channels over the N axes; spatial dims and Cin stay shard-local
+    (the layer's input activations are gathered over channels between
+    layers).
+
+    Spatial mode (ISSUE 9): ``spatial`` — a shard count, a mesh axis name,
+    or a pre-planned :class:`SpatialHalo` — partitions **H** instead: each
+    shard owns an H slab of the feature map and the per-shard x shape is the
+    *halo-augmented* local slab (the ``(lo−1)·stride + kh`` input-row window
+    its output rows consume, width pre-padded), with batch and Cout staying
+    shard-local — the data-ish mesh axes carry H, not batch.  ``stride`` /
+    ``padding`` are required to size the halo window.
     """
-    p = tuple(_resolve_partition(mesh, partition)) + (None, None)
-    batch_axes, cout_axes = p[0], p[1]
     n, h, w, c = x_shape
     kh, kw, cin, cout = w_shape
+    if spatial is not None:
+        hs = spatial if isinstance(spatial, SpatialHalo) else plan_spatial_halo(
+            h, kh, stride, padding, *spatial_shards(spatial, mesh)
+        )
+        return (n, hs.win, w + 2 * padding, c), w_shape
+    p = tuple(_resolve_partition(mesh, partition)) + (None, None)
+    batch_axes, cout_axes = p[0], p[1]
     return (
         (local_dim(n, mesh, batch_axes), h, w, c),
         (kh, kw, cin, local_dim(cout, mesh, cout_axes)),
     )
+
+
+# ---------------------------------------------------------------------------
+# cross-chip spatial (H) sharding with halo exchange (ISSUE 9, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialHalo:
+    """Plan for one spatially-sharded conv/pool layer seam.
+
+    Each of ``shards`` shards owns a contiguous H slab of the activation in
+    the *slab-major* layout ``(S, N, lx, W, C)``: buffer row ``r`` of slab
+    ``s`` always holds global row ``s·lx + r`` (zero when that row is beyond
+    the global extent — the invariant every spatial op re-establishes by
+    masking its ragged tail shard).  Before the op, each shard receives
+    ``up`` rows from the shard above and ``dn`` rows from the shard below —
+    the only cross-shard movement of the layer, ``kh − stride`` rows at an
+    aligned seam — and slices its ``win``-row input window at ``offsets[s]``
+    inside the extended buffer.  Zero fill at the mesh edges doubles as the
+    conv's spatial zero padding (``pad`` is re-applied to W explicitly).
+    """
+
+    shards: int  # S
+    axis: Optional[str]  # mesh axis the slab dim shards over (None = local)
+    h: int  # global input rows
+    ho: int  # global output rows
+    lx: int  # slab buffer rows of the incoming layout
+    lo: int  # output rows each shard computes (= ceil(ho / S))
+    win: int  # input rows of each shard's window: (lo − 1)·stride + kh
+    up: int  # halo rows received from the shard above
+    dn: int  # halo rows received from the shard below
+    offsets: tuple  # per-shard window start inside the (up + lx + dn) buffer
+    valid_out: tuple  # per-shard valid output rows (ragged tail < lo)
+    pad: int  # the conv's spatial zero padding (W is pre-padded by this)
+
+    @property
+    def ragged(self) -> bool:
+        return any(v != self.lo for v in self.valid_out)
+
+
+def spatial_shards(spatial, mesh=None) -> tuple:
+    """Resolve a ``spatial=`` option to ``(shards, axis_name_or_None)``.
+
+    An int is a plain shard count (slab-major simulation on however many
+    devices the arrays land on); a str names the mesh axis whose size is
+    the shard count and over which the slab dim is sharded.
+    """
+    if isinstance(spatial, str):
+        mesh = mesh if mesh is not None else _CTX.mesh
+        if mesh is None or spatial not in mesh.axis_names:
+            raise ValueError(
+                f"spatial mesh axis {spatial!r} needs an active mesh that "
+                f"has it (mesh={None if mesh is None else mesh.axis_names})"
+            )
+        return int(mesh.shape[spatial]), spatial
+    s = int(spatial)
+    if s < 1:
+        raise ValueError(f"spatial shard count must be >= 1, got {s}")
+    return s, None
+
+
+def plan_spatial_halo(
+    h: int, kh: int, stride: int, pad: int, shards: int,
+    axis: Optional[str] = None, lx: Optional[int] = None,
+) -> SpatialHalo:
+    """Plan the halo exchange for one conv/pool seam (all static Python ints).
+
+    ``h`` rows arrive laid out as ``shards`` slabs of ``lx`` buffer rows
+    (default: ceil-div — the layout :func:`plan_spatial_halo` itself assigns
+    to the *previous* layer's output, so chained calls pass ``lx=prev.lo``).
+    Shard ``s`` computes output rows ``[s·lo, s·lo + lo)`` of the
+    ``ho = (h + 2·pad − kh)//stride + 1`` global output rows, for which it
+    needs input rows ``[s·lo·stride − pad, …)`` — ``up``/``dn`` are the
+    worst-case per-seam row counts that window reaches into the neighbor
+    slabs.  At an aligned seam (``lo·stride == lx``) that is exactly the
+    paper's ``kh − stride`` halo rows.  Raises when a slab is too thin to
+    serve its neighbor's halo from one hop away (shards > what H supports).
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    if h < 1 or kh < 1 or stride < 1 or pad < 0:
+        raise ValueError(f"bad conv geometry h={h} kh={kh} stride={stride} pad={pad}")
+    ho = (h + 2 * pad - kh) // stride + 1
+    if ho < 1:
+        raise ValueError(f"conv produces no output rows (h={h}, kh={kh}, pad={pad})")
+    lx = -(-h // shards) if lx is None else int(lx)
+    if lx * shards < h:
+        raise ValueError(f"slab layout lx={lx} x {shards} shards cannot hold h={h}")
+    lo = -(-ho // shards)
+    win = (lo - 1) * stride + kh
+    up = dn = 0
+    offsets, valid_out = [], []
+    for s in range(shards):
+        g = s * lo * stride - pad  # global row of this shard's window start
+        up = max(up, s * lx - g)
+        dn = max(dn, (g + win) - (s + 1) * lx)
+        offsets.append(g - s * lx)  # relative to own slab start; += up below
+        valid_out.append(max(0, min(lo, ho - s * lo)))
+    up, dn = max(0, up), max(0, dn)
+    if up > lx or dn > lx:
+        raise ValueError(
+            f"spatial halo needs {up}/{dn} rows from a {lx}-row neighbor "
+            f"slab: h={h} is too thin for {shards} shards at kh={kh}, "
+            f"stride={stride} (halo exchange is single-hop)"
+        )
+    return SpatialHalo(
+        shards=shards, axis=axis, h=h, ho=ho, lx=lx, lo=lo, win=win,
+        up=up, dn=dn, offsets=tuple(o + up for o in offsets),
+        valid_out=tuple(valid_out), pad=pad,
+    )
+
+
+def halo_exchange(v: jax.Array, hs: SpatialHalo) -> jax.Array:
+    """The neighbor collective + window select of one spatial layer seam.
+
+    ``v``: slab-major raw array ``(S, N, lx, W, C)`` -> the per-shard input
+    windows ``(S, N, win, W, C)``.  Only the ``up``/``dn`` halo *rows* move
+    between shards — the slices along the (sharded) slab axis lower to a
+    neighbor collective-permute under GSPMD, and the mesh-edge shards
+    receive zeros, which doubles as the conv's H zero padding.
+    """
+    if v.ndim != 5 or v.shape[0] != hs.shards or v.shape[2] != hs.lx:
+        raise ValueError(
+            f"expected slab-major (S={hs.shards}, N, lx={hs.lx}, W, C), "
+            f"got {v.shape}"
+        )
+    # Neighbor movement is jnp.roll on the slab axis — the one shift pattern
+    # GSPMD reliably lowers to a collective-permute of just the rolled rows
+    # (slice+concat *along the sharded axis* miscompiles under the CPU SPMD
+    # partitioner) — with the wrapped-around mesh-edge slab masked to zero,
+    # which doubles as the conv's H zero padding.  Everything else (the row
+    # concat, the window select) happens on the unsharded row axis.
+    sidx = jax.lax.broadcasted_iota(jnp.int32, (hs.shards, 1, 1, 1, 1), 0)
+    parts = []
+    if hs.up:
+        above = jnp.roll(v, 1, axis=0)[:, :, hs.lx - hs.up:]
+        parts.append(jnp.where(sidx > 0, above, jnp.zeros_like(above)))
+    parts.append(v)
+    if hs.dn:
+        below = jnp.roll(v, -1, axis=0)[:, :, :hs.dn]
+        parts.append(
+            jnp.where(sidx < hs.shards - 1, below, jnp.zeros_like(below))
+        )
+    ext = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=2)
+    if len(set(hs.offsets)) == 1:
+        o = hs.offsets[0]
+        return ext[:, :, o:o + hs.win]
+    # misaligned seams (lo·stride != lx): per-shard window starts differ, so
+    # gather each shard's rows in place — indices stay within the shard's
+    # extended buffer, no extra communication
+    rows = (
+        jnp.asarray(hs.offsets, jnp.int32)[:, None]
+        + jnp.arange(hs.win, dtype=jnp.int32)[None, :]
+    )
+    return jnp.take_along_axis(ext, rows[:, None, :, None, None], axis=2)
+
+
+def mask_slab_rows(v: jax.Array, hs: SpatialHalo) -> jax.Array:
+    """Zero the ragged tail shard's invalid output rows (the slab invariant:
+    buffer rows beyond the global extent hold zeros, so the *next* seam's
+    zero fill and halo reads stay exact)."""
+    if not hs.ragged:
+        return v
+    rows = jax.lax.broadcasted_iota(jnp.int32, (hs.shards, 1, hs.lo, 1, 1), 2)
+    ok = rows < jnp.asarray(hs.valid_out, jnp.int32).reshape(-1, 1, 1, 1, 1)
+    return jnp.where(ok, v, jnp.zeros_like(v))
+
+
+def constrain_slabs(v: jax.Array, axis: Optional[str]) -> jax.Array:
+    """Keep a slab-major array's leading (slab) dim sharded over ``axis``.
+
+    No-op without an active mesh, when ``axis`` is absent from it, or when
+    the slab count does not divide the axis (the module's one drop rule).
+    """
+    mesh = _CTX.mesh
+    if axis is None or mesh is None or axis not in mesh.axis_names:
+        return v
+    if v.shape[0] % mesh.shape[axis]:
+        return v
+    return jax.lax.with_sharding_constraint(
+        v, NamedSharding(mesh, P(axis))
+    )
+
+
+def spatial_halo_bytes(hs: SpatialHalo, n: int, w: int, c: int,
+                       itemsize: int) -> int:
+    """Modeled bytes the halo exchange moves between shards for one seam:
+    every interior seam carries ``up`` rows downward and ``dn`` rows upward,
+    each a full-width (N, rows, W, C) strip."""
+    return (hs.shards - 1) * (hs.up + hs.dn) * n * w * c * itemsize
+
+
+def spatial_gather_bytes(h: int, n: int, w: int, c: int, shards: int,
+                         itemsize: int) -> int:
+    """Modeled bytes of the alternative the halo exchange replaces: a ring
+    all-gather of the whole (N, H, W, C) activation onto every shard before
+    each conv ((S−1)/S of the tensor received per shard, S shards)."""
+    return (shards - 1) * n * h * w * c * itemsize
 
 
 def logical_to_spec(
@@ -290,10 +518,14 @@ def logical_to_spec(
 ) -> P:
     """Translate logical axis names to a PartitionSpec.
 
-    If ``dim_sizes`` is given, axes whose size is not divisible by the mesh
-    axis size are only kept when GSPMD padding is acceptable (always true for
-    jit inputs/constraints); we still drop the mapping when the dim is
-    *smaller* than the mesh axis product (e.g. batch=1 over 16-way data).
+    If ``dim_sizes`` is given, a mapping whose dim is smaller than — or not
+    divisible by — the mesh axis product is dropped (replicated).  This is
+    the **one** drop rule of the module, shared with :func:`local_dim`
+    (ISSUE 9): it used to apply only under ``require_divisible=True`` (the
+    jit-boundary callers), which let `plan_conv(mesh=...)` ceil-div a ragged
+    Cout that `column_parallel_shardings` would silently replicate — a
+    planned local shape that never executed.  ``require_divisible`` is kept
+    for API compatibility but divisibility is now always enforced.
     """
     mesh = mesh or _CTX.mesh
     rules = rules or _CTX.rules
@@ -305,11 +537,8 @@ def logical_to_spec(
         if axes is not None and mesh is not None:
             axes = _present_axes(mesh, axes)
         if axes is not None and mesh is not None and dim_sizes is not None:
-            if dim_sizes[i] < _axis_size(mesh, axes):
-                axes = None
-            elif require_divisible and dim_sizes[i] % _axis_size(mesh, axes):
-                # jit in/out shardings must divide exactly (GSPMD pads only
-                # inside the program, not at its boundary)
+            s = _axis_size(mesh, axes)
+            if dim_sizes[i] < s or dim_sizes[i] % s:
                 axes = None
         out.append(axes)
     # a mesh axis may appear at most once: keep its first (leftmost) use.

@@ -227,7 +227,10 @@ def test_cnn_zoo_routes_direct(backend, net):
 
 
 def test_conv_vmem_overflow_falls_back_to_im2col():
-    hw = dataclasses.replace(TPU_V5E, vmem_bytes=64 * 1024)
+    # 16 KiB: below even the manual-DMA regime's minimal working set for
+    # this layer (ISSUE 8 halved the direct route's residency, so the old
+    # 64 KiB budget now legitimately fits a direct config)
+    hw = dataclasses.replace(TPU_V5E, vmem_bytes=16 * 1024)
     eng = Engine(TemplateConfig(backend="pallas", interpret=True, hw=hw))
     plan = eng.plan_conv((1, 64, 64, 32), (3, 3, 32, 64))
     assert plan.route == "im2col"
@@ -300,3 +303,58 @@ def test_plan_cnn_non_square_input():
     out = cnn_forward(tpl, spec, params, x, plan=plan)
     assert out.shape == (1, spec.n_classes)
     assert bool(jnp.isfinite(out).all())
+
+
+# ---------------------------------------------------------------------------
+# ad-hoc dispatch under an active mesh plans LOCAL shapes (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+
+class _StubMesh:
+    """Duck-typed 2x2 mesh: planners read ``.shape``/``.axis_names`` only,
+    and ``use_mesh`` enters it as a context manager — lets a single-device
+    host exercise multi-way local-shape math."""
+
+    shape = {"data": 2, "model": 2}
+    axis_names = ("data", "model")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+def test_adhoc_matmul_plans_local_shape_under_mesh():
+    """Plan-less Engine.matmul inside use_mesh must plan the per-shard
+    (m/data, n/model, k) shape — the one plan_gemm(mesh=...) warms and the
+    sharded program executes — not the global one."""
+    from repro.parallel.sharding import TRAIN_RULES, use_mesh
+
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True),
+                 plan_cache=PlanCache())
+    x = jax.random.normal(KEY, (8, 16))
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), (16, 32))
+    with use_mesh(_StubMesh(), TRAIN_RULES):
+        eng.matmul(x, w)
+    planned = {k[:3] for k in eng.plan_cache._blocks}
+    assert (4, 16, 16) in planned, planned  # local shard shape
+    assert (8, 32, 16) not in planned, planned  # global shape never planned
+    # outside a mesh context the global shape is planned as before
+    eng.matmul(x, w)
+    assert (8, 32, 16) in {k[:3] for k in eng.plan_cache._blocks}
+
+
+def test_adhoc_conv2d_plans_local_shape_under_mesh():
+    from repro.parallel.sharding import TRAIN_RULES, use_mesh
+
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True),
+                 plan_cache=PlanCache())
+    x = jax.random.normal(KEY, (4, 8, 8, 4)) * 0.3
+    w = jax.random.normal(jax.random.fold_in(KEY, 2), (3, 3, 4, 8)) * 0.3
+    with use_mesh(_StubMesh(), TRAIN_RULES):
+        eng.conv2d(x, w, padding=1)
+    # conv DSE keys: (hp, wp, cin, kh, kw, ho, wo, cout, stride, in_bytes,
+    # spec) — the planned Cout is the model-sharded local 4, never 8
+    couts = {k[7] for k in eng.plan_cache._conv_tiles}
+    assert couts == {4}, couts

@@ -385,7 +385,10 @@ def test_local_dim_rules():
     mesh = _StubMesh()
     assert axis_size(mesh, ("pod", "data")) == 4  # missing "pod" dropped
     assert local_dim(256, mesh, "data") == 64
-    assert local_dim(257, mesh, "data") == 65  # ceil-div: GSPMD pads the tail
+    # non-divisible stays replicated: the jit-boundary shardings DROP a
+    # mapping they can't pad, so the planner must plan the full dim — one
+    # rule on both sides (was ceil-div, which planned shapes that never ran)
+    assert local_dim(257, mesh, "data") == 257
     assert local_dim(3, mesh, "data") == 3  # smaller than axis: replicated
     assert local_dim(256, mesh, None) == 256
 

@@ -64,14 +64,16 @@ _SCRIPT = textwrap.dedent(
             cfg, params, tpl=tpl, clock=VirtualClock(), policy=policy,
             sched=SchedulerConfig(ladder=LADDER, slots=4, max_new_limit=8),
             mesh=mesh_arg)
+        warm_start = s.registry.misses
         s.warmup()
+        warmup_misses = s.registry.misses - warm_start
         replay_start = s.registry.misses
         replay_trace(s, trace())
         toks = {r.rid: list(r.generated) for r in s.results.values()}
-        return toks, s.registry.misses - replay_start, s
+        return toks, s.registry.misses - replay_start, warmup_misses, s
 
-    single, single_replay_misses, _ = run(None)
-    sharded, shard_replay_misses, s2 = run(mesh)
+    single, single_replay_misses, _, _ = run(None)
+    sharded, shard_replay_misses, cold_mesh_warmup_misses, s2 = run(mesh)
 
     # warm restart: persist the store, drop every in-process cache, reload,
     # and re-run sharded — warmup must plan from the store alone
@@ -79,7 +81,7 @@ _SCRIPT = textwrap.dedent(
     save_plan_store(store)
     reset_plan_caches()
     n_loaded = load_plan_store(store)
-    warm, warm_replay_misses, s3 = run(mesh)
+    warm, warm_replay_misses, warm_mesh_warmup_misses, s3 = run(mesh)
 
     print(json.dumps({
         "mode": MODE,
@@ -89,7 +91,8 @@ _SCRIPT = textwrap.dedent(
         "total_tokens": sum(len(v) for v in single.values()),
         "single_replay_misses": single_replay_misses,
         "shard_replay_misses": shard_replay_misses,
-        "cold_warmup_shard_misses": int(s2.counters["warmup_shard_misses"]),
+        "cold_mesh_warmup_misses": cold_mesh_warmup_misses,
+        "warm_mesh_warmup_misses": warm_mesh_warmup_misses,
         "warm_warmup_shard_misses": int(s3.counters["warmup_shard_misses"]),
         "warm_replay_misses": warm_replay_misses,
         "store_entries": n_loaded,
@@ -117,10 +120,16 @@ def test_sharded_decode_bitwise_and_warm_store(mode):
     assert rec["single_replay_misses"] == 0, rec
     assert rec["shard_replay_misses"] == 0, rec
 
-    # cold mesh warmup *does* plan per-shard local shapes...
-    assert rec["cold_warmup_shard_misses"] > 0, rec
+    # cold mesh warmup *does* perform shard-local DSE: the meshless run
+    # already fully warmed the registry at global shapes, so any miss during
+    # the mesh scheduler's warmup is a per-shard local plan.  (Since the
+    # ad-hoc dispatch mesh fix, locals are planned inline at trace time —
+    # counted here — and the explicit localize pass is a redundancy net
+    # that may legitimately find nothing left to plan.)
+    assert rec["cold_mesh_warmup_misses"] > 0, rec
     # ...and a store round-trip makes every one of them a hit: zero DSE
-    # misses per shard on warm restart, with identical tokens
+    # misses anywhere in warmup on warm restart, with identical tokens
+    assert rec["warm_mesh_warmup_misses"] == 0, rec
     assert rec["warm_warmup_shard_misses"] == 0, rec
     assert rec["warm_replay_misses"] == 0, rec
     assert rec["warm_tokens_equal"], rec

@@ -99,3 +99,60 @@ def test_serve_rules_replicate_params_over_data():
     assert TRAIN_RULES.get("embed") == "data"
     # TP stays on for both
     assert SERVE_RULES.get("mlp") == "model" == TRAIN_RULES.get("mlp")
+
+
+# ---------------------------------------------------------------------------
+# ragged-shard planning: ONE drop rule for planners and sharding builders
+# ---------------------------------------------------------------------------
+
+
+class _StubMesh:
+    """Duck-typed multi-way mesh: the planners and spec builders only read
+    ``.shape`` and ``.axis_names``, so shard-count math is testable on a
+    single-device host."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def test_ragged_cout_plans_the_shape_that_executes():
+    """ISSUE 9 satellite bugfix: ``local_dim`` used to ceil-div a
+    non-divisible dim (GSPMD-padding convention) while the jit-boundary
+    shardings *dropped* it — so ``plan_conv(mesh=...)`` planned a local Cout
+    that never executed.  Both sides now share the drop rule: non-divisible
+    stays replicated."""
+    from repro.parallel.sharding import local_conv_shapes, local_dim
+
+    mesh = _StubMesh(data=2, model=4)
+    # 6 % 4 != 0 -> planner keeps the full dim (replicated) ...
+    assert local_dim(6, mesh, ("model",)) == 6
+    # ... and the spec builder drops the mapping identically, with or
+    # without the legacy require_divisible flag
+    rules = ShardingRules(rules=(("vocab", "model"),))
+    for rd in (False, True):
+        spec = logical_to_spec(("vocab",), mesh=mesh, rules=rules,
+                               dim_sizes=(6,), require_divisible=rd)
+        assert spec in (P(), P(None))  # replicated either way
+    # divisible dims still shard on both sides
+    assert local_dim(8, mesh, ("model",)) == 2
+    assert logical_to_spec(("vocab",), mesh=mesh, rules=rules,
+                           dim_sizes=(8,)) == P("model")
+
+
+def test_ragged_conv_plan_shapes_match_execution():
+    from repro.parallel.sharding import local_conv_shapes
+
+    mesh = _StubMesh(data=2, model=4)
+    # Cout=6 not divisible by model=4: the planned local weight keeps the
+    # full Cout — exactly the shape the (dropped) sharding executes
+    x_shape, w_shape = local_conv_shapes(
+        (4, 8, 8, 3), (3, 3, 3, 6), mesh=mesh, partition=P("data", "model")
+    )
+    assert w_shape == (3, 3, 3, 6)
+    assert x_shape == (2, 8, 8, 3)  # batch 4 over data=2 still splits
+    # divisible Cout splits as before
+    _, w2 = local_conv_shapes(
+        (4, 8, 8, 3), (3, 3, 3, 8), mesh=mesh, partition=P("data", "model")
+    )
+    assert w2 == (3, 3, 3, 2)

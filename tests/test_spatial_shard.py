@@ -1,0 +1,366 @@
+"""Cross-chip spatial (H-slab) conv sharding differentials (ISSUE 9).
+
+The contract (DESIGN.md §10): a spatially-sharded forward — each shard
+owning an H slab, exchanging only the halo rows with its neighbors at every
+conv/pool seam — is **float-allclose and q16 bit-exact** versus the
+unsharded route, because contraction dims never cross a shard boundary so
+every output row is produced by the very same kernel reduction.
+
+Three layers of evidence:
+  * unit tests of the halo planner's static math (aligned / ragged /
+    strided / pool seams, one-hop legality errors);
+  * hypothesis differentials of the engine's spatial conv executor and of
+    whole-CNN forwards, meshless (the slab-major layout is device-count
+    agnostic) — including the ISSUE's named ragged case H=27 over 2 shards,
+    stride ∈ {1, 2}, and a pooled layer whose windows cross a slab seam;
+  * a subprocess multi-device run (8 host devices) where the slab dim is
+    *actually* sharded over a mesh axis and the forward runs under jit —
+    see ``test_spatial_shard_multidevice``.
+
+The exchanged-bytes model vs the full-activation gather it replaces is
+gated in ``benchmarks/kernel_table.py::spatial_shard_row``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import NumericsPolicy, Q2_14, QTensor, quantize
+from repro.core.template import default_template
+from repro.models import cnn as C
+from repro.parallel.sharding import (
+    halo_exchange,
+    mask_slab_rows,
+    plan_spatial_halo,
+    spatial_gather_bytes,
+    spatial_halo_bytes,
+    spatial_shards,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# halo planner: static math
+# ---------------------------------------------------------------------------
+
+
+def test_plan_aligned_seam_is_kh_minus_stride():
+    # the paper-flavored case: divisible H, stride 1 -> each seam moves
+    # exactly kh - stride rows in each direction
+    hs = plan_spatial_halo(28, 3, 1, 1, 2)
+    assert (hs.ho, hs.lo, hs.win) == (28, 14, 16)
+    assert (hs.up, hs.dn) == (1, 1)
+    assert hs.up + hs.dn == 3 - 1
+    assert hs.offsets == (0, 0) and not hs.ragged
+
+
+def test_plan_ragged_h27_over_2():
+    # the ISSUE's named ragged case: H=27 over 2 shards
+    hs = plan_spatial_halo(27, 3, 1, 1, 2)
+    assert hs.lx == 14 and hs.ho == 27 and hs.lo == 14
+    assert hs.valid_out == (14, 13) and hs.ragged
+
+
+def test_plan_stride2_and_pool_seams():
+    hs = plan_spatial_halo(27, 3, 2, 1, 2)
+    assert hs.ho == 14 and hs.lo == 7 and hs.win == 15
+    # pool = halo op with kh = stride = w, pad = 0; misaligned layout
+    # (lx=13 from a previous lo) forces per-shard window offsets
+    ph = plan_spatial_halo(26, 2, 2, 0, 2, lx=13)
+    assert ph.ho == 13 and ph.lo == 7 and ph.offsets == (0, 1)
+    assert ph.ragged and ph.valid_out == (7, 6)
+
+
+def test_plan_rejects_multi_hop_halo():
+    # a 7x7 kernel over 1-row slabs would need rows from 3 shards away
+    with pytest.raises(ValueError, match="single-hop"):
+        plan_spatial_halo(8, 7, 1, 3, 8)
+
+
+def test_plan_rejects_bad_geometry():
+    with pytest.raises(ValueError):
+        plan_spatial_halo(2, 5, 1, 0, 2)  # no output rows
+    with pytest.raises(ValueError):
+        plan_spatial_halo(8, 3, 1, 1, 0)  # zero shards
+    with pytest.raises(ValueError):
+        spatial_shards("data")  # axis name without an active mesh
+
+
+def test_byte_model_halo_below_gather():
+    hs = plan_spatial_halo(56, 3, 1, 1, 4)
+    halo = spatial_halo_bytes(hs, 8, 56, 64, 2)
+    gather = spatial_gather_bytes(56, 8, 56, 64, 4, 2)
+    assert 0 < halo < gather
+    # the ratio is (up+dn)/H — two orders of magnitude for deep-net H
+    assert halo * 10 < gather
+
+
+# ---------------------------------------------------------------------------
+# halo exchange: numeric window differential
+# ---------------------------------------------------------------------------
+
+
+def _to_slabs_np(x, shards):
+    n, h, w, c = x.shape
+    lx = -(-h // shards)
+    xp = np.pad(x, ((0, 0), (0, shards * lx - h), (0, 0), (0, 0)))
+    return jnp.asarray(xp.reshape(n, shards, lx, w, c).transpose(1, 0, 2, 3, 4))
+
+
+def _gather_np(v, ho):
+    a = np.asarray(v)
+    s, n = a.shape[0], a.shape[1]
+    return a.transpose(1, 0, 2, 3, 4).reshape(n, s * a.shape[2], *a.shape[3:])[:, :ho]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_halo_exchange_window_matches_global(seed):
+    rng = np.random.default_rng(seed)
+    kh = int(rng.choice([1, 2, 3, 5]))
+    stride = int(rng.choice([1, 2]))
+    pad = int(rng.choice([0, 1]))
+    shards = int(rng.choice([2, 3, 4]))
+    h = int(rng.integers(max(kh + shards, 2 * shards), 30))
+    hs = plan_spatial_halo(h, kh, stride, pad, shards)
+    x = rng.standard_normal((2, h, 4, 3)).astype(np.float32)
+    ext = np.asarray(halo_exchange(_to_slabs_np(x, shards), hs))
+    for s in range(shards):
+        g0 = s * hs.lo * stride - pad
+        want = np.zeros((2, hs.win, 4, 3), np.float32)
+        for r in range(hs.win):
+            if 0 <= g0 + r < h:
+                want[:, r] = x[:, g0 + r]
+        np.testing.assert_array_equal(ext[s], want)
+
+
+def test_mask_slab_rows_restores_invariant():
+    hs = plan_spatial_halo(27, 3, 1, 1, 2)
+    v = jnp.ones((2, 1, hs.lo, 3, 2))
+    m = np.asarray(mask_slab_rows(v, hs))
+    assert m[0].all()  # full shard untouched
+    assert m[1, :, :13].all() and not m[1, :, 13:].any()  # ragged tail zeroed
+
+
+# ---------------------------------------------------------------------------
+# engine: spatially-sharded conv == unsharded conv (float exact, q16 bitwise)
+# ---------------------------------------------------------------------------
+
+
+def _conv_case(seed):
+    rng = np.random.default_rng(seed)
+    kh = int(rng.choice([1, 3, 5]))
+    stride = int(rng.choice([1, 2]))
+    pad = int(rng.choice([0, 1, kh // 2]))
+    shards = int(rng.choice([2, 3]))
+    h = int(rng.integers(max(kh + stride, 3 * shards), 30))
+    w = int(rng.integers(kh + stride, 14))
+    cin, cout = int(rng.integers(1, 7)), int(rng.integers(1, 12))
+    kx = jax.random.fold_in(KEY, seed)
+    x = jnp.clip(jax.random.normal(kx, (2, h, w, cin)) * 0.25, -1, 1)
+    wt = jnp.clip(
+        jax.random.normal(jax.random.fold_in(kx, 1), (kh, kh, cin, cout)) * 0.25,
+        -1, 1,
+    )
+    b = jnp.clip(jax.random.normal(jax.random.fold_in(kx, 2), (cout,)) * 0.1, -1, 1)
+    return x, wt, b, kh, stride, pad, shards
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_spatial_conv_float_matches_unsharded(seed):
+    x, wt, b, kh, stride, pad, shards = _conv_case(seed)
+    eng = default_template("pallas").engine
+    ref = eng.conv2d(x, wt, bias=b, relu=True,
+                     plan=eng.plan_conv(x.shape, wt.shape, stride=stride,
+                                        padding=pad))
+    sp = eng.plan_conv(x.shape, wt.shape, stride=stride, padding=pad,
+                       spatial=shards)
+    out = eng.conv2d(_to_slabs_np(np.asarray(x), shards), wt, bias=b,
+                     relu=True, plan=sp)
+    got = _gather_np(out, sp.halo.ho)
+    np.testing.assert_allclose(got, np.asarray(ref), rtol=0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_spatial_conv_q16_bit_exact(seed):
+    x, wt, b, kh, stride, pad, shards = _conv_case(seed)
+    eng = default_template("q16").engine
+    qx = QTensor(quantize(x, Q2_14), Q2_14)
+    qw = QTensor(quantize(wt, Q2_14), Q2_14)
+    qb = QTensor(quantize(b, Q2_14), Q2_14)
+    ref = eng.conv2d(qx, qw, bias=qb, relu=True,
+                     plan=eng.plan_conv(x.shape, wt.shape, stride=stride,
+                                        padding=pad))
+    sp = eng.plan_conv(x.shape, wt.shape, stride=stride, padding=pad,
+                       spatial=shards)
+    slab = QTensor(_to_slabs_np(np.asarray(qx.raw), shards), Q2_14)
+    out = eng.conv2d(slab, qw, bias=qb, relu=True, plan=sp)
+    assert isinstance(out, QTensor)
+    got = _gather_np(out.raw, sp.halo.ho)
+    # bitwise: int16 raws identical, not merely close
+    np.testing.assert_array_equal(got, np.asarray(ref.raw))
+
+
+def test_spatial_conv_ragged_h27_stride_1_and_2():
+    # the ISSUE's named case, pinned (not just drawn): H=27 over 2 shards
+    eng = default_template("pallas").engine
+    kx = jax.random.fold_in(KEY, 999)
+    x = jax.random.normal(kx, (2, 27, 9, 4)) * 0.3
+    wt = jax.random.normal(jax.random.fold_in(kx, 1), (3, 3, 4, 8)) * 0.3
+    for stride in (1, 2):
+        ref = eng.conv2d(x, wt, plan=eng.plan_conv(x.shape, wt.shape,
+                                                   stride=stride, padding=1))
+        sp = eng.plan_conv(x.shape, wt.shape, stride=stride, padding=1,
+                           spatial=2)
+        assert sp.halo.ragged or stride == 2
+        out = eng.conv2d(_to_slabs_np(np.asarray(x), 2), wt, plan=sp)
+        np.testing.assert_allclose(_gather_np(out, sp.halo.ho),
+                                   np.asarray(ref), rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# whole network: plan_cnn(spatial=) forward == unsharded forward
+# ---------------------------------------------------------------------------
+
+# LeNet-flavored spec whose pool windows *cross* a slab seam: conv (k=3,
+# pad=0) maps 28 -> 26 rows over 2 shards (lo=13, odd), so the following
+# 2x2 pool's windows straddle the slab boundary (offsets differ per shard).
+SEAM_SPEC = C.CNNSpec(
+    "seamnet", 28, 2, 7,
+    convs=((5, 3, 1, 0, 2), (8, 3, 1, 0, 2)),
+    fcs=(24,),
+)
+
+
+@pytest.mark.parametrize("spec,shards", [
+    (C.LENET, 2), (C.LENET, 3), (SEAM_SPEC, 2),
+])
+def test_spatial_cnn_forward_float(spec, shards):
+    tpl = default_template("pallas")
+    params = C.init_cnn(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(KEY, (2, spec.input_hw, spec.input_hw,
+                                spec.input_ch)) * 0.5
+    ref = C.cnn_forward(tpl, spec, params, x)
+    plan = C.plan_cnn(tpl, spec, x.shape, spatial=shards)
+    assert plan.spatial == shards and plan.feat_h > 0
+    if spec is SEAM_SPEC:
+        # the pool seam is genuinely misaligned: per-shard offsets differ
+        assert len(set(plan.pool_halos[0].offsets)) > 1
+    got = C.cnn_forward(tpl, spec, params, x, plan=plan)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.parametrize("spec,shards", [
+    (C.LENET, 2), (C.LENET, 3), (SEAM_SPEC, 2),
+])
+def test_spatial_cnn_forward_q16_bit_exact(spec, shards):
+    # the grid-resident path: quantize once, every conv/pool on the int16
+    # grid — the sharded logits' underlying accumulations are identical, so
+    # the float read-out is bit-identical too
+    tpl = default_template("q16")
+    params = C.init_cnn(jax.random.PRNGKey(0), spec)
+    policy = NumericsPolicy("q16")
+    qp = C.quantize_cnn_params(tpl, spec, params, policy)
+    x = jax.random.normal(KEY, (2, spec.input_hw, spec.input_hw,
+                                spec.input_ch)) * 0.5
+    ref = C.cnn_forward(tpl, spec, qp, x, policy=policy)
+    plan = C.plan_cnn(tpl, spec, x.shape, spatial=shards)
+    got = C.cnn_forward(tpl, spec, qp, x, policy=policy, plan=plan)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_spatial_plan_memoized_separately():
+    tpl = default_template("pallas")
+    shape = (2, 32, 32, 1)
+    p1 = C.plan_cnn(tpl, C.LENET, shape)
+    p2 = C.plan_cnn(tpl, C.LENET, shape, spatial=2)
+    p3 = C.plan_cnn(tpl, C.LENET, shape, spatial=2)
+    assert p1.spatial == 1 and p2.spatial == 2
+    assert p2 is p3 and p1 is not p2
+    # describe() surfaces the seams for benchmark diffs
+    assert any("halo=S2" in line for line in p2.describe())
+
+
+# ---------------------------------------------------------------------------
+# multi-device: slab dim sharded over a real mesh axis, under jit
+# ---------------------------------------------------------------------------
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.pop("REPRO_PLAN_STORE", None)
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.core.quantization import NumericsPolicy
+    from repro.core.template import default_template
+    from repro.models import cnn as C
+    from repro.parallel.sharding import SERVE_RULES, use_mesh
+
+    MODE = os.environ["SPATIAL_TEST_MODE"]
+    from repro.launch.mesh import make_test_mesh
+
+    mesh = make_test_mesh()  # (2, 2) over ("data", "model") on 8 host devices
+    S = mesh.shape["data"]
+    spec = C.LENET
+    tpl = default_template(MODE)
+    params = C.init_cnn(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 1)) * 0.5
+    policy = NumericsPolicy("q16") if MODE == "q16" else None
+    if policy is not None:
+        params = C.quantize_cnn_params(tpl, spec, params, policy)
+
+    ref = C.cnn_forward(tpl, spec, params, x, policy=policy)
+
+    with use_mesh(mesh, SERVE_RULES):
+        plan = C.plan_cnn(tpl, spec, x.shape, mesh=mesh, spatial="data")
+        assert plan.spatial == S and plan.spatial_axis == "data"
+        assert all(cp.halo is not None and cp.halo.axis == "data"
+                   for cp in plan.convs)
+
+        fwd = jax.jit(lambda a: C.cnn_forward(
+            tpl, spec, params, a, policy=policy, plan=plan))
+        out = fwd(x)
+        out.block_until_ready()
+
+    print(json.dumps({
+        "mode": MODE,
+        "bitwise": bool(np.array_equal(np.asarray(out), np.asarray(ref))),
+        "allclose": bool(np.allclose(np.asarray(out), np.asarray(ref),
+                                     atol=1e-5)),
+        "devices": jax.device_count(),
+    }))
+    """
+)
+
+
+@pytest.mark.parametrize("mode", ["pallas", "q16"])
+def test_spatial_shard_multidevice(mode):
+    env = dict(os.environ, PYTHONPATH="src", SPATIAL_TEST_MODE=mode)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, f"spatial shard subprocess failed:\n{out.stderr[-4000:]}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 8, rec
+    assert rec["allclose"], rec
+    if mode == "q16":
+        # integer accumulation: the 4-shard forward is *bitwise* the
+        # unsharded one, not merely close
+        assert rec["bitwise"], rec
