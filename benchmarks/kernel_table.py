@@ -352,6 +352,42 @@ def q16_residency_row() -> dict:
     return row
 
 
+def precision_dse_row() -> dict:
+    """Mixed int8/int16 precision-DSE gate row (DESIGN.md §11), as JSON.
+
+    Runs the drift-aware per-layer precision DSE over the QAT-trained LeNet
+    (shared with ``benchmarks.precision_drift``, so the cold CI run pins one
+    consistent set of measured choices) and gates the two §11 laws: every
+    int8-chosen layer moves *exactly half* the q16 activation bytes, and the
+    composed mixed network keeps >= 99% argmax agreement with its float
+    reference.
+    """
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from benchmarks.precision_drift import lenet_precision_sweep
+
+    row = lenet_precision_sweep()
+    return {
+        "bench": "precision_dse",
+        "net": row["net"],
+        "budget": row["budget"],
+        "base_fmt": row["base_fmt"],
+        "plan": row["plan"],
+        "int8_layers": row["int8_layers"],
+        "argmax_agreement": row["argmax_agreement"],
+        "act_bytes_q16": row["act_bytes_q16"],
+        "act_bytes_mixed": row["act_bytes_mixed"],
+        "int8_layer_bytes_q16": row["int8_layer_bytes_q16"],
+        "int8_layer_bytes_mixed": row["int8_layer_bytes_mixed"],
+        "int8_half_bytes_exact": all(
+            row["int8_layer_bytes_mixed"][n] * 2 == row["int8_layer_bytes_q16"][n]
+            for n in row["int8_layers"]
+        ),
+    }
+
+
 def scheduler_mixed_trace_row() -> dict:
     """Continuous-batching mixed-trace throughput row, as JSON.
 
@@ -542,6 +578,15 @@ def main():
     assert qrow["bytes_ratio"] <= 0.5, \
         "q16 per-token activation bytes must be at most half the float path"
     assert qrow["lenet_argmax_agreement"] >= 0.99
+    print("\n== precision DSE: mixed int8/int16 plan (JSON, append-able trajectory) ==")
+    prow = precision_dse_row()
+    print(json.dumps(prow))
+    assert prow["int8_layers"], \
+        "the QAT-trained LeNet must drop at least one layer to the int8 rung"
+    assert prow["int8_half_bytes_exact"], \
+        "an int8-chosen layer must move exactly half the q16 activation bytes"
+    assert prow["argmax_agreement"] >= 0.99, \
+        "the composed mixed int8/int16 network fell below 99% argmax agreement"
     print("\n== continuous-batching mixed trace (JSON, append-able trajectory) ==")
     sched_row = scheduler_mixed_trace_row()
     print(json.dumps(sched_row))

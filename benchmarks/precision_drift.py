@@ -1,0 +1,456 @@
+"""Per-layer precision drift sweep + end-to-end fixed-point drift and bytes.
+
+Extends the original ``q16_drift`` benchmark (whose rows and gates it still
+emits — ``benchmarks.q16_drift`` remains a thin alias of this module) with
+the measurement side of the drift-aware precision DSE (DESIGN.md §11):
+
+  * solo-flip drift rows — for every layer (LeNet) / scan group (reduced
+    transformer), run the network with *only* that layer's activations
+    dropped to the int8 rung of the calibrated grid and record the argmax
+    agreement vs the float reference.  The emitted ``drift`` mapping is
+    exactly the dict :func:`repro.models.cnn.calibrate_cnn_precision` /
+    :func:`repro.models.transformer.calibrate_precision` consume via their
+    ``drift=`` argument, so a stored JSON short-circuits the sweep.
+  * the chosen mixed plan — the cheapest grid per layer meeting the network
+    accuracy budget — plus its structural activation bytes: an int8-chosen
+    layer moves exactly half the q16 bytes (1 vs 2 bytes per element).
+
+Drift is measured teacher-forced (per-position logits under identical
+inputs), so one early disagreement cannot cascade into a misleadingly low
+token match.  Bytes are structural: activations crossing the compute unit
+between layers plus KV-cache traffic, at 2 bytes (int16) / 1 byte (int8)
+vs 4 (f32); float islands run f32 on both paths and the final logits are
+model *output*, so neither is counted.
+
+    PYTHONPATH=src python -m benchmarks.precision_drift
+        [--out precision_drift.json] [--assert-agreement 0.99]
+        [--budget 0.99]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _agreement(lf, lq) -> dict:
+    lf, lq = jnp.asarray(lf), jnp.asarray(lq)
+    return {
+        "logit_mae": float(jnp.abs(lf - lq).mean()),
+        "logit_max_err": float(jnp.abs(lf - lq).max()),
+        "argmax_agreement": float(
+            (jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean()
+        ),
+    }
+
+
+# ---------------------------------------------------------------------------
+# structural bytes (per token / per sample activations crossing the unit)
+# ---------------------------------------------------------------------------
+
+
+def _transformer_decode_elements(cfg, cache_len: int) -> tuple:
+    """(per-layer activation, per-layer KV, head) elements one decode token
+    moves through the compute unit — the layer-count-free building block
+    shared by the uniform and mixed byte accountings."""
+    d = cfg.d_model
+    qh = cfg.eff_heads * cfg.head_dim
+    kv = cfg.n_kv_heads * cfg.head_dim
+    ff = cfg.d_ff
+    gates = 2 if cfg.act == "swiglu" else 1
+    per_layer_act = (
+        d              # quantized attention input (shared by q/k/v)
+        + qh + 2 * kv  # q/k/v projection outputs
+        + qh + d       # wo input + output
+        + d            # quantized FFN input
+        + gates * ff   # up (+gate) outputs
+        + ff + d       # down input + output
+    )
+    per_layer_kv = 2 * cache_len * kv + 2 * kv  # read k+v rings, write new row
+    head = d  # quantized post-final-norm hidden into the LM head
+    return per_layer_act, per_layer_kv, head
+
+
+def transformer_decode_bytes(cfg, cache_len: int, *, act_bytes: int,
+                             kv_bytes: int) -> int:
+    """Activation + KV bytes one decode token moves through the compute unit.
+
+    Counts the tensors entering/leaving GEMMs between layers and the ring
+    cache read/write; excludes weights (identical both paths), float-island
+    internals (f32 on both paths), and the logits (model output).
+    """
+    per_layer_act, per_layer_kv, head = _transformer_decode_elements(cfg, cache_len)
+    return cfg.n_layers * (per_layer_act * act_bytes + per_layer_kv * kv_bytes) \
+        + head * act_bytes
+
+
+def transformer_decode_bytes_mixed(cfg, cache_len: int, policy) -> int:
+    """Per-token decode bytes under a mixed per-group precision plan.
+
+    Each scan group's layers (and its slice of the KV cache) move bytes at
+    that group's grid width — 1 byte where the precision DSE dropped the
+    group to the int8 rung, 2 where it stayed int16.
+    """
+    from repro.models import transformer as T
+
+    per_layer_act, per_layer_kv, head = _transformer_decode_elements(cfg, cache_len)
+    pattern, g, r = T._split(cfg)
+
+    def group_bytes(name, n_layers):
+        width = policy.fmt_for(name).total_bits // 8
+        return n_layers * (per_layer_act + per_layer_kv) * width
+
+    total = sum(group_bytes(f"g{i}", g) for i in range(len(pattern)))
+    total += sum(group_bytes(f"tail{j}", 1) for j in range(r))
+    return total + head * (policy.fmt_for("head").total_bits // 8)
+
+
+def lenet_activation_elements(spec) -> dict:
+    """Per-grid activation elements of the CNN, keyed by layer name.
+
+    The grid convention of DESIGN.md §11: ``fmt_for(L)`` is layer L's
+    *input* activation grid, so layer L-1's output (and its grid-transparent
+    pooled map) are attributed to layer L.  The classifier output is the
+    model output (exact int32 read-out) and is excluded.
+    """
+    from repro.models.cnn import cnn_layer_names
+
+    names = cnn_layer_names(spec)
+    el = {n: 0 for n in names}
+    hw, ch = spec.input_hw, spec.input_ch
+    el[names[0]] += hw * hw * ch  # quantized input
+    for i, (cout, k, stride, pad, pool) in enumerate(spec.convs):
+        hw = (hw + 2 * pad - k) // stride + 1
+        el[names[i + 1]] += hw * hw * cout  # conv output (ReLU fused)
+        if pool:
+            hw //= pool
+            el[names[i + 1]] += hw * hw * cout  # pooled map, same grid
+        ch = cout
+    nc = len(spec.convs)
+    for i, wd in enumerate(spec.fcs):
+        el[names[nc + i + 1]] += wd
+    return el
+
+
+def lenet_activation_bytes(spec, *, act_bytes: int) -> int:
+    """Per-sample activation bytes crossing the unit at a uniform width."""
+    return sum(lenet_activation_elements(spec).values()) * act_bytes
+
+
+def lenet_activation_bytes_mixed(spec, policy) -> int:
+    """Per-sample activation bytes under a mixed per-layer precision plan."""
+    return sum(
+        el * (policy.fmt_for(name).total_bits // 8)
+        for name, el in lenet_activation_elements(spec).items()
+    )
+
+
+# ---------------------------------------------------------------------------
+# drift rows (the original q16 end-to-end rows)
+# ---------------------------------------------------------------------------
+
+
+def lenet_row(seed: int = 0, batches: int = 4) -> dict:
+    from repro.core.template import default_template
+    from repro.data.pipeline import synthetic_images
+    from repro.models.cnn import (
+        LENET, calibrate_cnn_policy, cnn_forward, init_cnn, quantize_cnn_params,
+    )
+
+    params = init_cnn(jax.random.PRNGKey(seed), LENET, scale=0.4)
+    tpl_f = default_template("xla")
+    tpl_q = default_template("q16")
+    cal_img, _ = synthetic_images(7, 0, 8, LENET.input_hw, LENET.input_ch,
+                                  LENET.n_classes)
+    policy = calibrate_cnn_policy(tpl_q, LENET, params, cal_img)
+    qp = quantize_cnn_params(tpl_q, LENET, params, policy)
+
+    eng = tpl_q.engine
+    q0, d0 = eng.counters["quantize_calls"], eng.counters["dequantize_calls"]
+    lf, lq = [], []
+    for b in range(batches):
+        img, _ = synthetic_images(99, 1000 + b, 16, LENET.input_hw,
+                                  LENET.input_ch, LENET.n_classes)
+        lf.append(cnn_forward(tpl_f, LENET, params, img))
+        lq.append(cnn_forward(tpl_q, LENET, qp, img, policy=policy))
+    row = {
+        "bench": "q16_drift_lenet",
+        "activation_fmt": policy.fmt.name,
+        "batches": batches,
+        **_agreement(jnp.concatenate(lf), jnp.concatenate(lq)),
+        "quantize_calls": eng.counters["quantize_calls"] - q0,
+        "dequantize_calls": eng.counters["dequantize_calls"] - d0,
+        "act_bytes_float": lenet_activation_bytes(LENET, act_bytes=4),
+        "act_bytes_q16": lenet_activation_bytes(LENET, act_bytes=2),
+    }
+    row["bytes_ratio"] = round(row["act_bytes_q16"] / row["act_bytes_float"], 3)
+    return row
+
+
+def transformer_row(seed: int = 0, arch: str = "qwen2-0.5b") -> dict:
+    from repro.configs import get_config, reduced
+    from repro.core.template import default_template
+    from repro.models import transformer as T
+
+    cfg = reduced(get_config(arch))
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    tpl_f = default_template("xla")
+    tpl_q = default_template("q16")
+    cal = jax.random.randint(jax.random.PRNGKey(seed + 9), (2, 16), 0, cfg.vocab)
+    policy = T.calibrate_policy(tpl_q, cfg, params, cal)
+    qp = T.quantize_params(tpl_q, cfg, params, policy)
+
+    # teacher-forced per-position drift on a fixed seed set
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (4, 32), 0, cfg.vocab)
+    lf, _ = T.forward(tpl_f, cfg, params, toks, mode="fwd")
+    lq, _ = T.forward(tpl_q, cfg, qp, toks, mode="fwd", policy=policy)
+
+    cache_len = 48
+    return {
+        "bench": "q16_drift_transformer",
+        "arch": cfg.name,
+        "activation_fmt": policy.fmt.name,
+        "positions": int(np.prod(toks.shape)),
+        **_agreement(lf, lq),
+        "per_token_bytes_float": transformer_decode_bytes(
+            cfg, cache_len, act_bytes=4, kv_bytes=4),
+        "per_token_bytes_q16": transformer_decode_bytes(
+            cfg, cache_len, act_bytes=2, kv_bytes=2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-layer solo-flip precision sweep (the DSE's measurement side, §11)
+# ---------------------------------------------------------------------------
+
+
+_QAT_CACHE: dict = {}
+
+
+def train_lenet_qat(seed: int = 0, float_steps: int = 60,
+                    qat_steps: int = 30):
+    """The QAT clamp recipe of examples/train_lenet_q214 in miniature.
+
+    Phase 1 trains float; phase 2 fine-tunes with fake-quant Q2.14 (STE),
+    whose saturating clamp trains the activations into the grid's [-2, 2)
+    range — the recipe that makes a *deployed* fixed-point network agree
+    with its float reference (an unclamped random/float-trained net drifts
+    as soon as an internal activation leaves the grid).  Memoized: the
+    kernel-table gate and this module's sweep measure the same network.
+    """
+    key = (seed, float_steps, qat_steps)
+    if key in _QAT_CACHE:
+        return _QAT_CACHE[key]
+    from functools import partial
+
+    from repro.core.template import default_template
+    from repro.data.pipeline import synthetic_images
+    from repro.models.cnn import LENET, cnn_forward, init_cnn
+    from repro.optim import AdamW, adamw_init, adamw_update
+
+    tpl = default_template("xla")
+    params = init_cnn(jax.random.PRNGKey(seed), LENET, scale=0.4)
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    opt_state = adamw_init(params)
+
+    def loss_fn(p, img, lab, quantized):
+        logits = cnn_forward(tpl, LENET, p, img, quantized=quantized)
+        onehot = jax.nn.one_hot(lab, LENET.n_classes)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        return -(onehot * logp).sum(-1).mean()
+
+    @partial(jax.jit, static_argnums=(4,))
+    def train_step(p, o, img, lab, quantized):
+        l, g = jax.value_and_grad(loss_fn)(p, img, lab, quantized)
+        p, o, _ = adamw_update(AdamW(lr=3e-3, weight_decay=0.0), g, o, p)
+        return p, o, l
+
+    for step in range(float_steps + qat_steps):
+        img, lab = synthetic_images(0, step, 32, LENET.input_hw,
+                                    LENET.input_ch, LENET.n_classes)
+        params, opt_state, _ = train_step(params, opt_state, img, lab,
+                                          step >= float_steps)
+    _QAT_CACHE[key] = params
+    return params
+
+
+def lenet_precision_sweep(seed: int = 0, budget: float = 0.99) -> dict:
+    """Solo-flip drift per LeNet layer + the chosen mixed int8/int16 plan.
+
+    Measures the QAT-trained LeNet (:func:`train_lenet_qat`) — the clamp
+    recipe holds its activations inside the grid, so the int8 rung has real
+    headroom and layers actually drop.  The reference is the *fake-quant*
+    float forward: the clamp is part of the trained model, so that is the
+    semantics deployment must agree with.  The sweep itself runs inside
+    :func:`calibrate_cnn_precision` (which pins every per-layer choice in
+    the PlanRegistry with ``source: measured`` — a warm plan store replays
+    the pins with zero forwards); this row reads the pins back and
+    evaluates the *composed* mixed plan on the measurement batches.
+    """
+    from repro.core.template import default_template
+    from repro.data.pipeline import synthetic_images
+    from repro.models.cnn import (
+        LENET, calibrate_cnn_policy, calibrate_cnn_precision, cnn_forward,
+        cnn_layer_names, quantize_cnn_params,
+    )
+
+    params = train_lenet_qat(seed)
+    tpl_f = default_template("xla")
+    tpl_q = default_template("q16")
+    cal_img, _ = synthetic_images(7, 0, 16, LENET.input_hw, LENET.input_ch,
+                                  LENET.n_classes)
+    policy = calibrate_cnn_policy(tpl_q, LENET, params, cal_img)
+    # the DSE measurement set: large enough that the composed-network budget
+    # check inside the calibrator is meaningful (the same batches the row's
+    # agreement is evaluated on — the budget is a guarantee on this set)
+    meas = jnp.concatenate([
+        synthetic_images(99, 1000 + b, 16, LENET.input_hw, LENET.input_ch,
+                         LENET.n_classes)[0]
+        for b in range(4)
+    ])
+    ref_logits = cnn_forward(tpl_f, LENET, params, meas, quantized=True)
+    mixed = calibrate_cnn_precision(
+        tpl_q, LENET, params, meas, budget=budget, policy=policy,
+        ref=jnp.argmax(ref_logits, axis=-1))
+
+    reg, hw = tpl_q.engine.plan_cache, tpl_q.config.hw
+    drift, plan = {}, {}
+    for name in cnn_layer_names(LENET):
+        pin = reg.precision_for(LENET.name, name, hw)
+        drift[name] = pin.drift
+        plan[name] = pin.fmt.name
+
+    qp = quantize_cnn_params(tpl_q, LENET, params, mixed)
+    mixed_logits = cnn_forward(tpl_q, LENET, qp, meas, policy=mixed)
+
+    el = lenet_activation_elements(LENET)
+    int8_layers = [n for n, f in mixed.layer_fmts if f.total_bits == 8]
+    row = {
+        "bench": "precision_dse_lenet",
+        "net": LENET.name,
+        "budget": budget,
+        "base_fmt": policy.fmt.name,
+        "drift": drift,          # feed back via calibrate_cnn_precision(drift=)
+        "plan": plan,
+        "int8_layers": sorted(int8_layers),
+        **_agreement(ref_logits, mixed_logits),
+        "act_bytes_q16": lenet_activation_bytes(LENET, act_bytes=2),
+        "act_bytes_mixed": lenet_activation_bytes_mixed(LENET, mixed),
+        "int8_layer_bytes_q16": {n: 2 * el[n] for n in int8_layers},
+        "int8_layer_bytes_mixed": {n: el[n] for n in int8_layers},
+    }
+    row["bytes_saved"] = row["act_bytes_q16"] - row["act_bytes_mixed"]
+    return row
+
+
+def transformer_precision_sweep(seed: int = 0, budget: float = 0.99,
+                                arch: str = "qwen2-0.5b") -> dict:
+    """Solo-flip drift per transformer scan group + the chosen mixed plan."""
+    from repro.configs import get_config, reduced
+    from repro.core.template import default_template
+    from repro.models import transformer as T
+
+    cfg = reduced(get_config(arch))
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    tpl_f = default_template("xla")
+    tpl_q = default_template("q16")
+    cal = jax.random.randint(jax.random.PRNGKey(seed + 9), (2, 16), 0, cfg.vocab)
+    policy = T.calibrate_policy(tpl_q, cfg, params, cal)
+    # measure the DSE on the same teacher-forced position set the row's
+    # agreement is evaluated on (the budget is a guarantee on this set)
+    meas = jax.random.randint(jax.random.PRNGKey(seed + 1), (4, 32), 0, cfg.vocab)
+    mixed = T.calibrate_precision(tpl_q, cfg, params, meas,
+                                  budget=budget, policy=policy)
+
+    reg, hw = tpl_q.engine.plan_cache, tpl_q.config.hw
+    drift, plan = {}, {}
+    for name in T.precision_group_names(cfg):
+        pin = reg.precision_for(cfg.name, name, hw)
+        drift[name] = pin.drift
+        plan[name] = pin.fmt.name
+
+    qp = T.quantize_params(tpl_q, cfg, params, mixed)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (4, 32), 0, cfg.vocab)
+    lf, _ = T.forward(tpl_f, cfg, params, toks, mode="fwd")
+    lq, _ = T.forward(tpl_q, cfg, qp, toks, mode="fwd", policy=mixed)
+
+    cache_len = 48
+    int8_groups = [n for n, f in mixed.layer_fmts if f.total_bits == 8]
+    return {
+        "bench": "precision_dse_transformer",
+        "net": cfg.name,
+        "budget": budget,
+        "base_fmt": policy.fmt.name,
+        "drift": drift,       # feed back via T.calibrate_precision(drift=)
+        "plan": plan,
+        "int8_groups": sorted(int8_groups),
+        **_agreement(lf, lq),
+        "per_token_bytes_q16": transformer_decode_bytes(
+            cfg, cache_len, act_bytes=2, kv_bytes=2),
+        "per_token_bytes_mixed": transformer_decode_bytes_mixed(
+            cfg, cache_len, mixed),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="write the rows as JSON here")
+    ap.add_argument("--assert-agreement", type=float, default=None,
+                    help="fail unless argmax agreement >= this on every row")
+    ap.add_argument("--budget", type=float, default=0.99,
+                    help="precision-DSE accuracy budget (min solo-flip "
+                         "argmax agreement to drop a layer to int8)")
+    args = ap.parse_args(argv)
+
+    print("== q16 end-to-end drift (grid-resident QTensor path) ==")
+    rows = [lenet_row(), transformer_row()]
+    for row in rows:
+        print(json.dumps(row))
+    lenet, tfm = rows
+    assert lenet["quantize_calls"] == lenet["batches"], (
+        "LeNet must quantize exactly once per forward (the input)")
+    assert lenet["dequantize_calls"] == lenet["batches"], (
+        "LeNet must dequantize exactly once per forward (the classifier)")
+    ratio = tfm["per_token_bytes_q16"] / tfm["per_token_bytes_float"]
+    assert ratio <= 0.5, f"q16 per-token bytes ratio {ratio} > 0.5"
+    assert lenet["bytes_ratio"] <= 0.5
+
+    print("\n== per-layer precision DSE sweep (solo-flip drift, §11) ==")
+    sweeps = [lenet_precision_sweep(budget=args.budget),
+              transformer_precision_sweep(budget=args.budget)]
+    for row in sweeps:
+        print(json.dumps(row))
+    lsw = sweeps[0]
+    assert lsw["int8_layers"], (
+        "the QAT-trained LeNet must drop at least one layer to the int8 rung "
+        "— the clamp recipe trains its activations into the grid")
+    # the structural half-bytes law: every int8-chosen layer moves exactly
+    # half the q16 bytes, and the network totals agree with the per-layer sum
+    for n in lsw["int8_layers"]:
+        assert lsw["int8_layer_bytes_mixed"][n] * 2 == lsw["int8_layer_bytes_q16"][n]
+    assert lsw["act_bytes_q16"] - lsw["bytes_saved"] == lsw["act_bytes_mixed"]
+    for row in sweeps:
+        assert row["plan"], "the DSE must record a choice for every layer"
+        assert all(v is None or 0.0 <= v <= 1.0 for v in row["drift"].values())
+    rows += sweeps
+
+    if args.assert_agreement is not None:
+        for row in rows:
+            if row["argmax_agreement"] < args.assert_agreement:
+                raise SystemExit(
+                    f"{row['bench']}: argmax agreement "
+                    f"{row['argmax_agreement']:.4f} < {args.assert_agreement}"
+                )
+        print(f"argmax agreement gate OK (>= {args.assert_agreement})")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,205 +1,24 @@
-"""End-to-end Q2.14/q16 accuracy drift + per-token activation bytes.
+"""Back-compat alias: this benchmark moved to :mod:`benchmarks.precision_drift`.
 
-The paper's claim is that an entire network can run in 16-bit fixed point
-with negligible accuracy loss while moving half the activation bytes.  This
-benchmark measures both halves of that claim for the grid-resident QTensor
-path (DESIGN.md §8) on two workloads:
-
-  * LeNet — the paper's own case-study CNN: the whole forward runs on the
-    int16 grid (one quantize at the input, one exact accumulator read-out at
-    the classifier).
-  * the reduced transformer config (qwen2-0.5b-smoke) — the ROADMAP "q16
-    transformer inference" item: attention + MLP projections grid-resident,
-    int16 KV cache, float only at the designated islands.
-
-Drift is measured teacher-forced (per-position logits under identical
-inputs), so one early disagreement cannot cascade into a misleadingly low
-token match.  Bytes are structural: activations crossing the compute unit
-between layers plus KV-cache traffic, at 2 bytes (int16) vs 4 (f32); float
-islands run f32 on both paths and the final logits are model *output*, so
-neither is counted.  The q16/float ratio is therefore exactly 0.5 — the
-acceptance bound "q16 ≤ half the float path" is checked, not assumed.
-
-    PYTHONPATH=src python -m benchmarks.q16_drift [--out q16_drift.json]
-        [--assert-agreement 0.99]
+The original q16 end-to-end drift rows (and their CI gates) are emitted by
+the extended per-layer precision sweep; ``python -m benchmarks.q16_drift``
+keeps working, as do the structural-bytes imports in ``kernel_table``.
 """
 from __future__ import annotations
 
-import argparse
-import json
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-def _agreement(lf, lq) -> dict:
-    lf, lq = jnp.asarray(lf), jnp.asarray(lq)
-    return {
-        "logit_mae": float(jnp.abs(lf - lq).mean()),
-        "logit_max_err": float(jnp.abs(lf - lq).max()),
-        "argmax_agreement": float(
-            (jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean()
-        ),
-    }
-
-
-# ---------------------------------------------------------------------------
-# structural bytes (per token / per sample activations crossing the unit)
-# ---------------------------------------------------------------------------
-
-
-def transformer_decode_bytes(cfg, cache_len: int, *, act_bytes: int,
-                             kv_bytes: int) -> int:
-    """Activation + KV bytes one decode token moves through the compute unit.
-
-    Counts the tensors entering/leaving GEMMs between layers and the ring
-    cache read/write; excludes weights (identical both paths), float-island
-    internals (f32 on both paths), and the logits (model output).
-    """
-    d = cfg.d_model
-    qh = cfg.eff_heads * cfg.head_dim
-    kv = cfg.n_kv_heads * cfg.head_dim
-    ff = cfg.d_ff
-    gates = 2 if cfg.act == "swiglu" else 1
-    per_layer_act = (
-        d              # quantized attention input (shared by q/k/v)
-        + qh + 2 * kv  # q/k/v projection outputs
-        + qh + d       # wo input + output
-        + d            # quantized FFN input
-        + gates * ff   # up (+gate) outputs
-        + ff + d       # down input + output
-    )
-    per_layer_kv = 2 * cache_len * kv + 2 * kv  # read k+v rings, write new row
-    head = d  # quantized post-final-norm hidden into the LM head
-    return cfg.n_layers * (per_layer_act * act_bytes + per_layer_kv * kv_bytes) \
-        + head * act_bytes
-
-
-def lenet_activation_bytes(spec, *, act_bytes: int) -> int:
-    """Per-sample activation elements crossing the unit for the CNN zoo."""
-    hw, ch = spec.input_hw, spec.input_ch
-    total = hw * hw * ch  # quantized input
-    for cout, k, stride, pad, pool in spec.convs:
-        hw = (hw + 2 * pad - k) // stride + 1
-        total += hw * hw * cout  # conv output (ReLU fused in-kernel)
-        if pool:
-            hw //= pool
-            total += hw * hw * cout  # pooled map feeding the next stage
-        ch = cout
-    fan = hw * hw * ch
-    for wd in spec.fcs:  # classifier output excluded: it is the model output
-        total += wd
-    return total * act_bytes
-
-
-# ---------------------------------------------------------------------------
-# drift rows
-# ---------------------------------------------------------------------------
-
-
-def lenet_row(seed: int = 0, batches: int = 4) -> dict:
-    from repro.core.template import default_template
-    from repro.data.pipeline import synthetic_images
-    from repro.models.cnn import (
-        LENET, calibrate_cnn_policy, cnn_forward, init_cnn, quantize_cnn_params,
-    )
-
-    params = init_cnn(jax.random.PRNGKey(seed), LENET, scale=0.4)
-    tpl_f = default_template("xla")
-    tpl_q = default_template("q16")
-    cal_img, _ = synthetic_images(7, 0, 8, LENET.input_hw, LENET.input_ch,
-                                  LENET.n_classes)
-    policy = calibrate_cnn_policy(tpl_q, LENET, params, cal_img)
-    qp = quantize_cnn_params(tpl_q, LENET, params, policy)
-
-    eng = tpl_q.engine
-    q0, d0 = eng.counters["quantize_calls"], eng.counters["dequantize_calls"]
-    lf, lq = [], []
-    for b in range(batches):
-        img, _ = synthetic_images(99, 1000 + b, 16, LENET.input_hw,
-                                  LENET.input_ch, LENET.n_classes)
-        lf.append(cnn_forward(tpl_f, LENET, params, img))
-        lq.append(cnn_forward(tpl_q, LENET, qp, img, policy=policy))
-    row = {
-        "bench": "q16_drift_lenet",
-        "activation_fmt": policy.fmt.name,
-        "batches": batches,
-        **_agreement(jnp.concatenate(lf), jnp.concatenate(lq)),
-        "quantize_calls": eng.counters["quantize_calls"] - q0,
-        "dequantize_calls": eng.counters["dequantize_calls"] - d0,
-        "act_bytes_float": lenet_activation_bytes(LENET, act_bytes=4),
-        "act_bytes_q16": lenet_activation_bytes(LENET, act_bytes=2),
-    }
-    row["bytes_ratio"] = round(row["act_bytes_q16"] / row["act_bytes_float"], 3)
-    return row
-
-
-def transformer_row(seed: int = 0, arch: str = "qwen2-0.5b") -> dict:
-    from repro.configs import get_config, reduced
-    from repro.core.template import default_template
-    from repro.models import transformer as T
-
-    cfg = reduced(get_config(arch))
-    params = T.init_params(jax.random.PRNGKey(seed), cfg)
-    tpl_f = default_template("xla")
-    tpl_q = default_template("q16")
-    cal = jax.random.randint(jax.random.PRNGKey(seed + 9), (2, 16), 0, cfg.vocab)
-    policy = T.calibrate_policy(tpl_q, cfg, params, cal)
-    qp = T.quantize_params(tpl_q, cfg, params, policy)
-
-    # teacher-forced per-position drift on a fixed seed set
-    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (4, 32), 0, cfg.vocab)
-    lf, _ = T.forward(tpl_f, cfg, params, toks, mode="fwd")
-    lq, _ = T.forward(tpl_q, cfg, qp, toks, mode="fwd", policy=policy)
-
-    cache_len = 48
-    return {
-        "bench": "q16_drift_transformer",
-        "arch": cfg.name,
-        "activation_fmt": policy.fmt.name,
-        "positions": int(np.prod(toks.shape)),
-        **_agreement(lf, lq),
-        "per_token_bytes_float": transformer_decode_bytes(
-            cfg, cache_len, act_bytes=4, kv_bytes=4),
-        "per_token_bytes_q16": transformer_decode_bytes(
-            cfg, cache_len, act_bytes=2, kv_bytes=2),
-    }
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default=None, help="write the rows as JSON here")
-    ap.add_argument("--assert-agreement", type=float, default=None,
-                    help="fail unless argmax agreement >= this on both rows")
-    args = ap.parse_args(argv)
-
-    print("== q16 end-to-end drift (grid-resident QTensor path) ==")
-    rows = [lenet_row(), transformer_row()]
-    for row in rows:
-        print(json.dumps(row))
-    lenet, tfm = rows
-    assert lenet["quantize_calls"] == lenet["batches"], (
-        "LeNet must quantize exactly once per forward (the input)")
-    assert lenet["dequantize_calls"] == lenet["batches"], (
-        "LeNet must dequantize exactly once per forward (the classifier)")
-    ratio = tfm["per_token_bytes_q16"] / tfm["per_token_bytes_float"]
-    assert ratio <= 0.5, f"q16 per-token bytes ratio {ratio} > 0.5"
-    assert lenet["bytes_ratio"] <= 0.5
-    if args.assert_agreement is not None:
-        for row in rows:
-            if row["argmax_agreement"] < args.assert_agreement:
-                raise SystemExit(
-                    f"{row['bench']}: argmax agreement "
-                    f"{row['argmax_agreement']:.4f} < {args.assert_agreement}"
-                )
-        print(f"argmax agreement gate OK (>= {args.assert_agreement})")
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
-    return rows
-
+from benchmarks.precision_drift import (  # noqa: F401
+    _agreement,
+    lenet_activation_bytes,
+    lenet_activation_elements,
+    lenet_precision_sweep,
+    lenet_row,
+    main,
+    train_lenet_qat,
+    transformer_decode_bytes,
+    transformer_decode_bytes_mixed,
+    transformer_precision_sweep,
+    transformer_row,
+)
 
 if __name__ == "__main__":
     main()

@@ -6,13 +6,17 @@
   table2          — paper Table 2 (vs Bjerge et al. on Ultra96)
   dse_sweep       — paper §III.E tau≈2mu finding + TPU block DSE
   kernel_table    — Pallas compute-unit structural metrics + oracle check
-  q16_drift       — end-to-end fixed-point drift + per-token bytes (§8)
+  precision_drift — fixed-point drift + per-layer precision DSE sweep (§8/§11)
   scheduler_soak  — continuous-batching mixed-trace soak (virtual clock)
   router_soak     — multi-process replica fleet + injected kill (§9)
   roofline_report — §Roofline table from the dry-run cache (if present)
+
+The per-module rows are consolidated into ``BENCH_pr10.json`` at the repo
+root (one object per module that returned JSON-serializable rows).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
@@ -31,15 +35,23 @@ def main():
         print(f"[plan-store] warm-started {n} entries from {store_path}")
 
     failures = []
-    for name in ("table1", "table2", "dse_sweep", "kernel_table", "q16_drift",
-                 "scheduler_soak", "router_soak"):
+    results = {}
+    for name in ("table1", "table2", "dse_sweep", "kernel_table",
+                 "precision_drift", "scheduler_soak", "router_soak"):
         print("\n" + "=" * 72)
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            out = mod.main()
         except Exception:
             traceback.print_exc()
             failures.append(name)
+        else:
+            try:
+                json.dumps(out)
+            except (TypeError, ValueError):
+                continue
+            if out is not None:
+                results[name] = out
 
     for label, d in (("baseline", "experiments/dryrun"),
                      ("optimized", "experiments/dryrun_opt")):
@@ -76,6 +88,16 @@ def main():
     if store_path:
         save_plan_store(store_path)
         print(f"[plan-store] saved to {store_path}")
+    bench_out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_pr10.json")
+    try:
+        with open(bench_out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        print(f"[bench] consolidated results for {sorted(results)} "
+              f"-> {bench_out}")
+    except Exception:
+        traceback.print_exc()
+        failures.append("BENCH_pr10.json")
     if failures:
         print(f"\nbenchmark FAILURES: {failures}")
         sys.exit(1)

@@ -1,25 +1,35 @@
 """Paper-faithful end-to-end example: LeNet on the unified compute unit with
-Q2.14 quantization-aware training, deployed on the grid-resident QTensor path.
+Qm.n quantization-aware training, deployed on the grid-resident QTensor path.
 
 This is the paper's deployment story in miniature:
   1. train float (conv + FC all routed through the Template compute unit)
-  2. fine-tune with fake-quant Q2.14 (straight-through estimator)
+  2. fine-tune with fake-quant (straight-through estimator) on the chosen
+     grid — Q2.14 trains activations into [-2, 2); ``--fmt q17`` instead
+     clamps into [-1, 1) so the network is int8-ready on the Q1.7 rung
   3. deploy: calibrate the activation grid from one batch, quantize the
      weights **once** into QTensors, and run inference entirely in int16
      fixed point — the whole network performs exactly one quantize (the
      input) and one dequantize (the classifier read-out), the stay-on-grid
      dataflow an FPGA build of the paper's template executes (DESIGN.md §8).
+  4. precision DSE: measure per-layer drift against the fake-quant
+     reference and drop every layer that tolerates it to the int8 rung
+     (Q2.14 -> Q2.6, Q1.7 stays 8-bit), halving activation bytes
+     (DESIGN.md §11).
 
-    PYTHONPATH=src python examples/train_lenet_q214.py
+    PYTHONPATH=src python examples/train_lenet_q214.py [--fmt q17]
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantization import Q1_7, Q2_14
 from repro.core.template import default_template
 from repro.data.pipeline import synthetic_images
 from repro.models.cnn import (
     LENET,
     calibrate_cnn_policy,
+    calibrate_cnn_precision,
     cnn_forward,
     init_cnn,
     quantize_cnn_params,
@@ -27,25 +37,33 @@ from repro.models.cnn import (
 from repro.optim import AdamW, adamw_init, adamw_update
 
 
-def accuracy(tpl, params, step0, n=4, quantized=False):
+def accuracy(tpl, params, step0, n=4, quantized=False, fmt=Q2_14):
     hits = tot = 0
     for s in range(n):
         img, lab = synthetic_images(99, step0 + s, 32, LENET.input_hw,
                                     LENET.input_ch, LENET.n_classes)
-        logits = cnn_forward(tpl, LENET, params, img, quantized=quantized)
+        logits = cnn_forward(tpl, LENET, params, img, quantized=quantized,
+                             fmt=fmt)
         hits += int((jnp.argmax(logits, -1) == lab).sum())
         tot += lab.shape[0]
     return hits / tot
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fmt", choices=["q214", "q17"], default="q214",
+                    help="fake-quant grid for the QAT fine-tune: q214 trains "
+                         "activations into [-2,2), q17 into [-1,1)")
+    args = ap.parse_args(argv)
+    fq = Q1_7 if args.fmt == "q17" else Q2_14
+
     tpl = default_template("xla")
     params = init_cnn(jax.random.PRNGKey(0), LENET, scale=0.4)
     opt = AdamW(lr=3e-3, weight_decay=0.0)
     opt_state = adamw_init(params)
 
     def loss_fn(p, img, lab, quantized):
-        logits = cnn_forward(tpl, LENET, p, img, quantized=quantized)
+        logits = cnn_forward(tpl, LENET, p, img, quantized=quantized, fmt=fq)
         onehot = jax.nn.one_hot(lab, LENET.n_classes)
         logp = jax.nn.log_softmax(logits.astype(jnp.float32))
         return -(onehot * logp).sum(-1).mean()
@@ -65,15 +83,15 @@ def main():
         if step % 20 == 0:
             print(f"  step {step:3d} loss {float(l):.4f}")
 
-    print("phase 2: Q2.14 quantization-aware fine-tune (STE)")
+    print(f"phase 2: {fq.name} quantization-aware fine-tune (STE)")
     for step in range(60, 90):
         img, lab = synthetic_images(0, step, 32, 32, 1, 10)
         params, opt_state, l = train_step(params, opt_state, img, lab, True)
     print(f"  final QAT loss {float(l):.4f}")
 
     acc_f = accuracy(tpl, params, 1000, quantized=False)
-    acc_q = accuracy(tpl, params, 1000, quantized=True)
-    print(f"\naccuracy float={acc_f:.2%}  fake-quant Q2.14={acc_q:.2%}")
+    acc_q = accuracy(tpl, params, 1000, quantized=True, fmt=fq)
+    print(f"\naccuracy float={acc_f:.2%}  fake-quant {fq.name}={acc_q:.2%}")
 
     # deployment numerics: calibrate once, quantize weights once, then run
     # the whole network grid-resident in int16 (QTensor path, DESIGN.md §8)
@@ -87,7 +105,7 @@ def main():
     eng = tpl_q16.engine
     q0, d0 = eng.counters["quantize_calls"], eng.counters["dequantize_calls"]
     img, lab = synthetic_images(99, 2000, 16, 32, 1, 10)
-    lf = cnn_forward(tpl, LENET, params, img, quantized=True)
+    lf = cnn_forward(tpl, LENET, params, img, quantized=True, fmt=fq)
     lq = cnn_forward(tpl_q16, LENET, qparams, img, policy=policy)
     agree = float((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).mean())
     print(f"grid-resident q16 vs float-backend argmax agreement: {agree:.2%} "
@@ -104,6 +122,25 @@ def main():
     assert qparams2 is qparams and eng.counters["qparam_builds"] == b0
     print(f"qparam cache: {eng.counters['qparam_builds']} build(s), "
           f"{eng.counters['qparam_cache_hits']} hit(s) — weights quantized once")
+
+    # precision DSE: the QAT clamp is part of the trained model, so the
+    # fake-quant forward is the accuracy reference (DESIGN.md §11) — an
+    # unclamped float reference would penalize the grid for saturating
+    # activations the training loop deliberately clamped.
+    ref = jnp.argmax(lf, -1)
+    mixed = calibrate_cnn_precision(tpl_q16, LENET, params, img,
+                                    budget=0.99, policy=policy, ref=ref)
+    plan = dict(mixed.layer_fmts)
+    int8 = sorted(n for n, f in plan.items() if f.total_bits == 8)
+    print(f"\nprecision DSE (budget 0.99): base {mixed.fmt.name}, "
+          f"{len(int8)}/{len(plan)} layers on the int8 rung -> "
+          f"{ {n: f.name for n, f in sorted(plan.items())} }")
+    if int8:
+        lm = cnn_forward(tpl_q16, LENET,
+                         quantize_cnn_params(tpl_q16, LENET, params, mixed),
+                         img, policy=mixed)
+        am = float((jnp.argmax(lf, -1) == jnp.argmax(lm, -1)).mean())
+        print(f"mixed int8/int16 argmax agreement vs fake-quant ref: {am:.2%}")
 
 
 if __name__ == "__main__":

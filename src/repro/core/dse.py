@@ -35,6 +35,7 @@ from .tiling import ConvTiling, FCTiling, MatmulBlock, TPU_V5E, TpuSpec, ceil_di
 __all__ = [
     "DseResult",
     "ConvTileChoice",
+    "choose_precision",
     "conv_choice_from_doc",
     "conv_choice_to_doc",
     "explore_board",
@@ -469,3 +470,34 @@ def default_conv_tile_for(
         hp, wp, cin, kh, kw, ho, wo, cout, stride, spec, in_bytes
     )
     return ranked[0] if ranked else None
+
+
+# ---------------------------------------------------------------------------
+# per-layer precision assignment (drift-aware DSE, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def choose_precision(
+    drift: dict,
+    budget: float,
+    base_fmt,
+    low_fmt,
+) -> dict:
+    """Assign each layer the cheapest activation grid meeting ``budget``.
+
+    ``drift`` maps layer name -> measured *solo-flip* argmax agreement (the
+    network's end-to-end agreement vs the all-``base_fmt`` reference when
+    only that layer drops to ``low_fmt``; from the extended drift sweep in
+    ``benchmarks/precision_drift.py``).  A layer gets ``low_fmt`` (int8 —
+    half the activation/KV bytes) iff its solo-flip agreement is >= the
+    network accuracy budget; everything else keeps ``base_fmt``.  Pure and
+    deterministic: the engine pins the result in the PlanRegistry with
+    ``source: measured`` provenance and the per-layer drift attached, so a
+    warm restart replays the exact assignment with zero sweeps.
+    """
+    if not 0.0 <= budget <= 1.0:
+        raise ValueError(f"precision budget must be in [0, 1], got {budget}")
+    return {
+        layer: low_fmt if agreement >= budget else base_fmt
+        for layer, agreement in drift.items()
+    }

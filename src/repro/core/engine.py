@@ -72,6 +72,7 @@ __all__ = [
     "PlanStoreError",
     "ConvPlan",
     "GemmPlan",
+    "PrecisionChoice",
     "Engine",
     "batch_rungs",
     "bucket_for",
@@ -131,11 +132,14 @@ def batch_rungs(slots: int) -> tuple:
 
 PLAN_STORE_FORMAT = "repro-plan-store"
 #: v2 (PR 8) added the ConvTileChoice column-tiling fields (tile_cols,
-#: col_tiles, halo_mode).  v1 stores still load: their gemm entries merge
-#: unchanged (same schema), their conv entries are dropped so those layers
+#: col_tiles, halo_mode).  v3 (PR 10) added the per-layer precision section
+#: (the drift-aware int8/int16 grid assignments, DESIGN.md §11).  Older
+#: stores still load leniently: v2 keeps its gemm *and* conv entries (their
+#: schemas are unchanged) and simply has no precision pins; v1 keeps gemm
+#: only — its pre-column-tiling conv entries are dropped so those layers
 #: re-plan against the three-regime DSE instead of raising PlanStoreError.
-PLAN_STORE_VERSION = 2
-PLAN_STORE_COMPAT_VERSIONS = (1,)
+PLAN_STORE_VERSION = 3
+PLAN_STORE_COMPAT_VERSIONS = (1, 2)
 #: Env var naming the default persisted plan-store path.  When set, the
 #: launch drivers (serve/train) and the benchmark harness warm-start from it
 #: and write newly planned shapes back on exit.
@@ -144,6 +148,19 @@ PLAN_STORE_ENV = "REPRO_PLAN_STORE"
 
 class PlanStoreError(ValueError):
     """A plan store file is unreadable, corrupted, or version-mismatched."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionChoice:
+    """One pinned per-layer activation grid (the precision DSE's output).
+
+    ``fmt`` is the layer's *input* activation format (int8 rung or the
+    network's base int16 grid); ``drift`` records the measured solo-flip
+    argmax agreement that justified the choice (None for analytic pins).
+    """
+
+    fmt: QFormat
+    drift: Optional[float] = None
 
 
 def _spec_to_doc(spec: TpuSpec) -> dict:
@@ -175,8 +192,10 @@ class PlanRegistry:
     def __init__(self) -> None:
         self._blocks: dict = {}
         self._conv_tiles: dict = {}
+        self._precision: dict = {}
         self._block_src: dict = {}
         self._conv_src: dict = {}
+        self._prec_src: dict = {}
         self.hits = 0
         self.misses = 0
 
@@ -211,6 +230,54 @@ class PlanRegistry:
         self._conv_tiles[key] = choice
         self._conv_src[key] = "analytic"
         return choice
+
+    # -- per-layer precision pins (the drift-aware DSE, DESIGN.md §11) -------
+
+    def precision_for(
+        self, net: str, layer: str, spec: TpuSpec = TPU_V5E
+    ) -> Optional[PrecisionChoice]:
+        """The pinned activation grid for one named layer, or None.
+
+        A found pin counts as a hit; a miss is *not* ticked here — the
+        precision search is a whole-network drift sweep, so the single miss
+        is charged by :meth:`pin_precision` when the sweep actually ran
+        (``searched=True``).  A warm restart therefore replays every layer
+        as hits with zero misses (``REPRO_PLAN_ASSERT_WARM``).
+        """
+        ent = self._precision.get((net, layer, spec))
+        if ent is not None:
+            self.hits += 1
+        return ent
+
+    def pin_precision(
+        self,
+        net: str,
+        layer: str,
+        fmt: QFormat,
+        *,
+        drift: Optional[float] = None,
+        spec: TpuSpec = TPU_V5E,
+        source: str = "measured",
+        searched: bool = True,
+    ) -> PrecisionChoice:
+        """Record one layer's chosen grid (``source: measured`` provenance —
+        the choice came from a real drift sweep, not an analytic model)."""
+        if searched:
+            self.misses += 1
+        choice = PrecisionChoice(fmt=fmt, drift=drift)
+        key = (net, layer, spec)
+        self._precision[key] = choice
+        self._prec_src[key] = source
+        return choice
+
+    def precision_plan(self, net: str, spec: TpuSpec = TPU_V5E) -> dict:
+        """All pinned (layer -> QFormat) choices for one network (no
+        counter ticks — this is an inspection/report helper)."""
+        return {
+            key[1]: ent.fmt
+            for key, ent in self._precision.items()
+            if key[0] == net and key[2] == spec
+        }
 
     # -- measured-time autotune ---------------------------------------------
 
@@ -270,9 +337,11 @@ class PlanRegistry:
         """Separate GEMM-block and conv-tile counts (+ counters, provenance)."""
         measured = sum(1 for s in self._block_src.values() if s == "measured")
         measured += sum(1 for s in self._conv_src.values() if s == "measured")
+        measured += sum(1 for s in self._prec_src.values() if s == "measured")
         return {
             "gemm_blocks": len(self._blocks),
             "conv_tiles": len(self._conv_tiles),
+            "precision": len(self._precision),
             "hits": self.hits,
             "misses": self.misses,
             "measured": measured,
@@ -300,13 +369,15 @@ class PlanRegistry:
                 into["misses"] = into.get("misses", 0) + delta["misses"]
 
     def __len__(self) -> int:
-        return len(self._blocks) + len(self._conv_tiles)
+        return len(self._blocks) + len(self._conv_tiles) + len(self._precision)
 
     def clear(self) -> None:
         self._blocks.clear()
         self._conv_tiles.clear()
+        self._precision.clear()
         self._block_src.clear()
         self._conv_src.clear()
+        self._prec_src.clear()
         self.hits = 0
         self.misses = 0
 
@@ -344,12 +415,23 @@ class PlanRegistry:
             }
             for key, choice in sorted(self._conv_tiles.items(), key=lambda kv: order(kv[0]))
         ]
+        precision = [
+            {
+                "spec": six(key[-1]),
+                "key": list(key[:-1]),  # [net, layer]
+                "fmt": [ent.fmt.int_bits, ent.fmt.frac_bits, ent.fmt.total_bits],
+                "drift": ent.drift,
+                "source": self._prec_src.get(key, "measured"),
+            }
+            for key, ent in sorted(self._precision.items(), key=lambda kv: order(kv[0]))
+        ]
         return {
             "format": PLAN_STORE_FORMAT,
             "version": PLAN_STORE_VERSION,
             "specs": specs,
             "gemm": gemm,
             "conv": conv,
+            "precision": precision,
         }
 
     def merge_doc(self, doc: dict) -> int:
@@ -360,14 +442,19 @@ class PlanRegistry:
         number of entries merged; raises :class:`PlanStoreError` on any
         format/structure mismatch or an *unknown* version.  A known older
         version (``PLAN_STORE_COMPAT_VERSIONS``) loads leniently: gemm
-        entries merge (their schema is unchanged), conv entries are skipped
-        so those layers re-plan under the current DSE — a warm fleet store
-        survives the upgrade instead of crashing the loader.
+        entries merge from every compat version (their schema is unchanged),
+        conv entries merge from v2+ (v1's pre-column-tiling docs are dropped
+        so those layers re-plan under the current DSE), and precision pins
+        merge from v3+ (older stores simply have none, so those networks
+        re-run the drift sweep) — a warm fleet store survives the upgrade
+        instead of crashing the loader.
         """
         blocks: dict = {}
         block_src: dict = {}
         conv_tiles: dict = {}
         conv_src: dict = {}
+        precision: dict = {}
+        prec_src: dict = {}
         try:
             if doc.get("format") != PLAN_STORE_FORMAT:
                 raise PlanStoreError(
@@ -380,7 +467,7 @@ class PlanRegistry:
                     f"plan store version {version!r} does not match "
                     f"this build's version {PLAN_STORE_VERSION}"
                 )
-            legacy_conv = version != PLAN_STORE_VERSION
+            legacy_conv = version < 2  # pre-column-tiling conv docs
             specs = [_spec_from_doc(d) for d in doc["specs"]]
 
             def spec_at(ix) -> TpuSpec:
@@ -410,6 +497,20 @@ class PlanRegistry:
                     None if choice is None else dse.conv_choice_from_doc(choice)
                 )
                 conv_src[key] = str(e.get("source", "analytic"))
+            for e in doc.get("precision", ()) if version >= 3 else ():
+                if len(e["key"]) != 2 or len(e["fmt"]) != 3:
+                    raise PlanStoreError(
+                        f"bad precision entry: key={e['key']!r} fmt={e['fmt']!r}"
+                    )
+                net, layer = (str(v) for v in e["key"])
+                key = (net, layer, spec_at(e["spec"]))
+                ib, fb, tb = (int(v) for v in e["fmt"])
+                drift = e.get("drift")
+                precision[key] = PrecisionChoice(
+                    fmt=QFormat(ib, fb, tb),
+                    drift=None if drift is None else float(drift),
+                )
+                prec_src[key] = str(e.get("source", "measured"))
         except PlanStoreError:
             raise
         except (KeyError, IndexError, TypeError, ValueError) as err:
@@ -418,7 +519,8 @@ class PlanRegistry:
         # must never leave a half-merged registry behind
         self._merge_entries(self._blocks, self._block_src, blocks, block_src)
         self._merge_entries(self._conv_tiles, self._conv_src, conv_tiles, conv_src)
-        return len(blocks) + len(conv_tiles)
+        self._merge_entries(self._precision, self._prec_src, precision, prec_src)
+        return len(blocks) + len(conv_tiles) + len(precision)
 
     @staticmethod
     def _merge_entries(dst_vals: dict, dst_src: dict, vals: dict, srcs: dict) -> None:
@@ -443,12 +545,20 @@ class PlanRegistry:
         tiles = {
             k: v for k, v in other._conv_tiles.items() if spec is None or k[-1] == spec
         }
+        prec = {
+            k: v for k, v in other._precision.items() if spec is None or k[-1] == spec
+        }
         self._merge_entries(self._blocks, self._block_src, blocks, other._block_src)
         self._merge_entries(self._conv_tiles, self._conv_src, tiles, other._conv_src)
+        self._merge_entries(self._precision, self._prec_src, prec, other._prec_src)
 
     def specs(self) -> set:
         """The distinct hardware specs this registry holds entries for."""
-        return {key[3] for key in self._blocks} | {key[-1] for key in self._conv_tiles}
+        return (
+            {key[3] for key in self._blocks}
+            | {key[-1] for key in self._conv_tiles}
+            | {key[-1] for key in self._precision}
+        )
 
     def gemm_shapes(self, spec: TpuSpec = TPU_V5E) -> list:
         """The distinct (m, n, k) GEMM keys planned for ``spec``, sorted.
@@ -649,7 +759,10 @@ def warm_start_plan_store(path: Optional[str] = None) -> tuple[Optional[str], in
 
 def plan_store_stats() -> dict:
     """Aggregate :meth:`PlanRegistry.stats` across all per-spec registries."""
-    total = {"gemm_blocks": 0, "conv_tiles": 0, "hits": 0, "misses": 0, "measured": 0}
+    total = {
+        "gemm_blocks": 0, "conv_tiles": 0, "precision": 0,
+        "hits": 0, "misses": 0, "measured": 0,
+    }
     for reg in _PLAN_CACHES.values():
         for k, v in reg.stats().items():
             total[k] += v
@@ -739,8 +852,8 @@ def validate_policy(config, policy: Optional[NumericsPolicy]) -> NumericsPolicy:
     policy = policy or NumericsPolicy("float")
     if policy.quantized and config.backend != "q16":
         raise ValueError(
-            f"NumericsPolicy('q16') requires the 'q16' backend, but the "
-            f"template is configured with backend={config.backend!r}"
+            f"NumericsPolicy({policy.name!r}) requires the 'q16' backend, but "
+            f"the template is configured with backend={config.backend!r}"
         )
     return policy
 
@@ -905,7 +1018,7 @@ class Engine:
         if backend == "xla" or route == "xla":
             return ConvPlan("xla", stride, pad, 0, None, gemm, 0)
         if route != "im2col":
-            in_bytes = 2 if backend == "q16" else 4
+            in_bytes = (self.config.qformat.total_bits // 8) if backend == "q16" else 4
             choice = self.plan_cache.conv_tile_for(
                 hp, wp, cin, kh, kw, ho, wo, cout, stride, in_bytes, self.config.hw
             )
@@ -991,6 +1104,8 @@ class Engine:
         fmt: Optional[QFormat] = None,
         contraction_axes: Optional[tuple] = None,
         fused_bias: bool = False,
+        act_fmt: Optional[QFormat] = None,
+        total_bits: Optional[int] = None,
     ) -> QTensor:
         """Quantize one persistent weight (calibrated per-tensor by default;
         ``fmt`` pins a format — e.g. biases stay on the activation grid so
@@ -1002,11 +1117,16 @@ class Engine:
         the FPGA DSP48 cascade is 48-bit, DESIGN.md §2), and the exact
         adversarial bound on one output is ``max|x_raw| · L1`` with L1 the
         largest per-output column sum of |w_raw|.  The calibrated fraction is
-        capped so even ``2^15 · L1`` cannot reach 2^31 — the finest weight
-        grid that can never overflow, regardless of activation content; with
-        ``fused_bias`` one extra headroom bit covers the in-kernel shifted
-        bias add.  Counted separately from ``quantize_calls``: weight
-        quantization happens once at preparation, never inside a step.
+        capped so even ``max|x_raw| · L1`` cannot reach 2^31 — the finest
+        weight grid that can never overflow, regardless of activation
+        content; with ``fused_bias`` one extra headroom bit covers the
+        in-kernel shifted bias add.  ``act_fmt`` names the activation grid
+        feeding this layer (default ``policy.fmt``): an int8 input has
+        ``max|x_raw| ≤ 2^7``, which widens the budget by 8 bits vs int16.
+        ``total_bits`` pins the weight's *storage* rung (default: match the
+        activation's — the int8 weight grid of the precision ladder).
+        Counted separately from ``quantize_calls``: weight quantization
+        happens once at preparation, never inside a step.
         """
         import math
 
@@ -1015,18 +1135,22 @@ class Engine:
             return quantize_qtensor(w, fmt)
         if not policy.per_tensor_weights:
             return quantize_qtensor(w, policy.fmt)
+        act_fmt = act_fmt or policy.fmt
+        total_bits = total_bits or act_fmt.total_bits
         max_frac = None
         if contraction_axes:
             l1 = float(jnp.max(jnp.sum(jnp.abs(w.astype(jnp.float32)),
                                        axis=contraction_axes)))
             if l1 > 0:
-                # 2^15 * (L1 * 2^frac) < 2^31  =>  frac <= 16 - log2(L1),
-                # minus one bit of margin when a bias add joins the epilogue
-                budget = 15.0 if fused_bias else 16.0
+                # 2^(act_bits-1) * (L1 * 2^frac) < 2^31
+                #   =>  frac <= 32 - act_bits - log2(L1)
+                # (16/15 for int16 activations, 24/23 for int8), minus one
+                # bit of margin when a bias add joins the epilogue
+                budget = float(31 - (act_fmt.total_bits - 1) - (1 if fused_bias else 0))
                 max_frac = math.floor(budget - math.log2(l1) - 1e-9)
         from .quantization import calibrate_format
 
-        wfmt = calibrate_format(w, max_frac=max_frac)
+        wfmt = calibrate_format(w, max_frac=max_frac, total_bits=total_bits)
         return QTensor(quantize(w, wfmt), wfmt)
 
     def qparams_for(self, params, policy: NumericsPolicy, build):

@@ -37,11 +37,14 @@ import jax.numpy as jnp
 __all__ = [
     "QFormat",
     "Q2_14",
+    "Q1_7",
+    "Q2_6",
     "QTensor",
     "NumericsPolicy",
     "FLOAT_POLICY",
     "Q16_POLICY",
     "calibrate_format",
+    "int8_rung",
     "quantize",
     "quantize_qtensor",
     "dequantize",
@@ -60,18 +63,34 @@ class QFormat:
 
     Q2.14 = 2 integer bits (one of which is the sign) + 14 fractional bits
     = 16 bits total, representable range [-2, 2 - 2^-14] ("two bits integer
-    and fourteen bits fractional", paper §II/§III.E).  Storage is int16, so
-    int_bits + frac_bits must be <= 16.
+    and fourteen bits fractional", paper §II/§III.E).  ``total_bits`` names
+    the storage width of the precision ladder rung this format lives on —
+    int16 (the paper's grid) or int8 (Q1.7 / Q2.6, DESIGN.md §11) — and
+    int_bits + frac_bits must fit it.  Sub-width formats (e.g. Q2.6 in an
+    int16 rung) are legal: the raw range just doesn't fill the container.
     """
 
     int_bits: int
     frac_bits: int
+    total_bits: int = 16
 
     def __post_init__(self):
-        if self.int_bits + self.frac_bits > 16:
-            raise ValueError("Qm.n with m+n > 16 does not fit int16 storage")
+        if self.total_bits not in (8, 16):
+            raise ValueError(
+                f"unsupported storage width {self.total_bits} (want 8 or 16)"
+            )
+        if self.int_bits + self.frac_bits > self.total_bits:
+            raise ValueError(
+                f"Qm.n with m+n > {self.total_bits} does not fit "
+                f"int{self.total_bits} storage"
+            )
         if self.int_bits < 1:
             raise ValueError("need at least the sign bit")
+
+    @property
+    def storage_dtype(self):
+        """The integer dtype raw values of this format are stored as."""
+        return jnp.int8 if self.total_bits == 8 else jnp.int16
 
     @property
     def scale(self) -> float:
@@ -106,12 +125,18 @@ class QFormat:
 
 #: The paper's format: 2 integer bits, 14 fractional bits.
 Q2_14 = QFormat(int_bits=2, frac_bits=14)
+#: int8 rungs of the precision ladder (DESIGN.md §11): Q1.7 covers [-1, 1)
+#: at 2^-7 resolution (QAT-clamped activations), Q2.6 covers the paper's
+#: [-2, 2) range at 2^-6.
+Q1_7 = QFormat(int_bits=1, frac_bits=7, total_bits=8)
+Q2_6 = QFormat(int_bits=2, frac_bits=6, total_bits=8)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class QTensor:
-    """int16 raw fixed-point values + the :class:`QFormat` they live on.
+    """Raw fixed-point values (int16 or int8 per ``fmt.storage_dtype``) + the
+    :class:`QFormat` they live on.
 
     A *pytree*: the raw array is the traced child, the format is static aux
     data — so QTensors flow through ``jax.jit`` / ``lax.scan`` unchanged and
@@ -152,27 +177,40 @@ class QTensor:
 
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
-    """The numerics one forward pass runs under (DESIGN.md §8).
+    """The numerics one forward pass runs under (DESIGN.md §8, §11).
 
-    ``name``: "float" (every op in the input dtype) or "q16" (activations
+    ``name``: "float" (every op in the input dtype), "q16" (activations
     resident on the ``fmt`` grid between compute-unit ops; float only at the
     designated islands — softmax, norms, RoPE, non-ReLU activations — and the
-    final logits read-out).  ``per_tensor_weights`` selects max-abs calibrated
-    Qm.n per weight tensor instead of forcing every weight onto ``fmt``.
-    Frozen + hashable: compiled-step memos and qparam caches key on it.
+    final logits read-out), "q8" (same residency on an int8 grid), or
+    "mixed" (per-layer grids named by ``layer_fmts``, chosen by the
+    drift-aware precision DSE).  ``per_tensor_weights`` selects max-abs
+    calibrated Qm.n per weight tensor instead of forcing every weight onto
+    ``fmt``.  ``layer_fmts`` is a sorted tuple of (layer_name, QFormat)
+    pairs — layers not named fall back to ``fmt`` — kept as a tuple so the
+    policy stays frozen + hashable: compiled-step memos and qparam caches
+    key on it.
     """
 
-    name: str = "float"  # "float" | "q16"
+    name: str = "float"  # "float" | "q16" | "q8" | "mixed"
     fmt: QFormat = Q2_14
     per_tensor_weights: bool = True
+    layer_fmts: tuple = ()  # ((layer_name, QFormat), ...)
 
     def __post_init__(self):
-        if self.name not in ("float", "q16"):
+        if self.name not in ("float", "q16", "q8", "mixed"):
             raise ValueError(f"unknown numerics policy {self.name!r}")
 
     @property
     def quantized(self) -> bool:
-        return self.name == "q16"
+        return self.name != "float"
+
+    def fmt_for(self, layer: str) -> QFormat:
+        """The activation grid of one named layer (``fmt`` if unnamed)."""
+        for name, fmt in self.layer_fmts:
+            if name == layer:
+                return fmt
+        return self.fmt
 
 
 FLOAT_POLICY = NumericsPolicy("float")
@@ -194,10 +232,23 @@ def calibrate_format(x, *, total_bits: int = 16,
         frac = total_bits - int_bits
         if max_frac is not None:
             frac = max(0, min(frac, max_frac))
-        fmt = QFormat(int_bits, frac)
+        fmt = QFormat(int_bits, frac, total_bits)
         if maxabs <= fmt.max_val:
             return fmt
-    return QFormat(total_bits, 0)  # saturating fallback for huge magnitudes
+    return QFormat(total_bits, 0, total_bits)  # saturating fallback
+
+
+def int8_rung(fmt: QFormat) -> QFormat | None:
+    """The int8 rung covering the same real range as an int16 grid.
+
+    Q2.14 -> Q2.6, Q1.15 -> Q1.7 (the precision ladder, DESIGN.md §11): keep
+    the integer bits (range), drop fractional resolution to fit 8-bit
+    storage.  None when the range itself needs more than 7 + sign bits —
+    such a layer has no int8 rung and must stay int16.
+    """
+    if fmt.int_bits >= 8:
+        return None
+    return QFormat(fmt.int_bits, 8 - fmt.int_bits, 8)
 
 
 def quantize_qtensor(x: jax.Array, fmt: QFormat | None = None) -> QTensor:
@@ -207,10 +258,11 @@ def quantize_qtensor(x: jax.Array, fmt: QFormat | None = None) -> QTensor:
 
 
 def quantize(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
-    """Real -> int16 raw fixed point, round-to-nearest-even, saturating."""
+    """Real -> raw fixed point (``fmt.storage_dtype``), round-to-nearest-even,
+    saturating."""
     raw = jnp.round(x.astype(jnp.float32) * fmt.scale)
     raw = jnp.clip(raw, fmt.raw_min, fmt.raw_max)
-    return raw.astype(jnp.int16)
+    return raw.astype(fmt.storage_dtype)
 
 
 def dequantize(q: jax.Array, fmt: QFormat = Q2_14, dtype=jnp.float32) -> jax.Array:
@@ -243,11 +295,13 @@ def fake_quant_fmt(x: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:
     return fake_quant(x, fmt.scale, fmt.min_val, fmt.max_val)
 
 
-def shift_saturate_i32(acc: jax.Array, shift: int, raw_min: int, raw_max: int) -> jax.Array:
+def shift_saturate_i32(acc: jax.Array, shift: int, raw_min: int, raw_max: int,
+                       out_dtype=jnp.int16) -> jax.Array:
     """The one write-back ladder: round-half-up arithmetic shift (exact
-    up-scale for ``shift <= 0``) + saturation into an int16 raw range.
+    up-scale for ``shift <= 0``) + saturation into a raw integer range,
+    stored as ``out_dtype`` (int16 or int8 per the output grid's rung).
 
-    Pure jnp on int32 values with static ``shift``, so the Pallas q16
+    Pure jnp on int32 values with static ``shift``, so the Pallas q16/q8
     kernels call this exact function inside their epilogues — the
     bit-identical contract between :func:`requantize_i32` and the kernels is
     structural, not copy-pasted.
@@ -258,20 +312,24 @@ def shift_saturate_i32(acc: jax.Array, shift: int, raw_min: int, raw_max: int) -
         shifted = acc
     else:
         shifted = acc << (-shift)
-    return jnp.clip(shifted, raw_min, raw_max).astype(jnp.int16)
+    return jnp.clip(shifted, raw_min, raw_max).astype(out_dtype)
 
 
 def requantize_i32(acc: jax.Array, shift: int, fmt: QFormat = Q2_14) -> jax.Array:
-    """Saturating write-back of an int32 accumulator to Qm.n int16.
+    """Saturating write-back of an int32 accumulator to Qm.n raw storage.
 
     ``shift`` is the scale gap between the accumulator and the output grid:
     for an x(Qa.fa) x w(Qb.fb) product written back to Qm.n it is
     ``fa + fb - n``.  Positive shifts round-to-nearest before the arithmetic
-    right shift; ``shift <= 0`` up-scales (exact).  Saturates into the int16
-    raw range — this models the FPGA accumulator write-back stage, and the
-    Pallas kernels' fused epilogue runs the same :func:`shift_saturate_i32`.
+    right shift; ``shift <= 0`` up-scales (exact).  Saturates into the raw
+    range of ``fmt`` (int16 or int8) — this models the FPGA accumulator
+    write-back stage, and the Pallas kernels' fused epilogue runs the same
+    :func:`shift_saturate_i32`.  The mixed-boundary epilogue is this exact
+    ladder with an int8-rung output format: an int8 layer feeds an int16
+    layer (or vice versa) with zero float round-trips (DESIGN.md §11).
     """
-    return shift_saturate_i32(acc, shift, fmt.raw_min, fmt.raw_max)
+    return shift_saturate_i32(acc, shift, fmt.raw_min, fmt.raw_max,
+                              fmt.storage_dtype)
 
 
 def requantize_i32_to_i16(acc: jax.Array, fmt: QFormat = Q2_14) -> jax.Array:

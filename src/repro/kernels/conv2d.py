@@ -102,13 +102,14 @@ def _float_epilogue(acc, b_ref, *, relu, qout):
     return acc
 
 
-def _q16_epilogue(acc, b_ref, *, relu, shift, bias_shift, raw_min, raw_max):
+def _q16_epilogue(acc, b_ref, *, relu, shift, bias_shift, raw_min, raw_max,
+                  out_dtype=jnp.int16):
     """Fused bias/ReLU/saturating-requantize on the i32 accumulator."""
     if b_ref is not None:
         acc = acc + (b_ref[...].astype(jnp.int32) << bias_shift)
     if relu:
         acc = jnp.maximum(acc, 0)
-    return shift_saturate_i32(acc, shift, raw_min, raw_max)
+    return shift_saturate_i32(acc, shift, raw_min, raw_max, out_dtype)
 
 
 def _conv_kernel(*refs, kh, kw, th, wo, stride, relu, qout, halo, fused_bias):
@@ -401,12 +402,13 @@ def conv2d_pallas(
 
 def _conv_q16_kernel(
     *refs, kh, kw, th, wo, stride, relu, shift, bias_shift, raw_min, raw_max,
-    halo, fused_bias
+    out_dtype, halo, fused_bias
 ):
-    # Same dataflow as _conv_kernel, fixed point: int16 taps accumulated in
-    # int32 (DESIGN.md §2), saturating round-shift write-back to the output
-    # Q format.  ``shift`` = fa+fb-fo for x(Qa.fa) x w(Qb.fb) -> Qm.fo;
-    # ``bias_shift`` aligns the raw bias onto the 2^(fa+fb) accumulator.
+    # Same dataflow as _conv_kernel, fixed point: int16/int8 taps accumulated
+    # in int32 (DESIGN.md §2), saturating round-shift write-back to the output
+    # Q format's storage rung.  ``shift`` = fa+fb-fo for x(Qa.fa) x w(Qb.fb)
+    # -> Qm.fo; ``bias_shift`` aligns the raw bias onto the 2^(fa+fb)
+    # accumulator.
     x1_ref, x2_ref, w_ref, b_ref, o_ref, acc_ref = _split_refs(refs, halo, fused_bias)
     acc_ref[...] = jnp.zeros_like(acc_ref)
     cin = x1_ref.shape[3]
@@ -420,7 +422,7 @@ def _conv_q16_kernel(
             acc_ref[...] += jnp.dot(lhs, rhs, preferred_element_type=jnp.int32)
     out = _q16_epilogue(
         acc_ref[...], b_ref, relu=relu, shift=shift, bias_shift=bias_shift,
-        raw_min=raw_min, raw_max=raw_max,
+        raw_min=raw_min, raw_max=raw_max, out_dtype=out_dtype,
     )
     o_ref[...] = out.reshape(1, th, wo, -1)
 
@@ -448,16 +450,19 @@ def conv2d_q16_pallas(
     halo_mode: str = "two_block",
     interpret: bool = False,
 ) -> jax.Array:
-    """Fixed-point NHWC VALID conv, any stride.  All tensors int16 raw Qm.n.
+    """Fixed-point NHWC VALID conv, any stride.  int16/int8 raw Qm.n tensors.
 
     ``tile_rows`` / ``tile_cols`` / ``halo_mode`` tile the output exactly as
     in :func:`conv2d_pallas`; zero-padded halo rows/columns contribute zero
     products and integer accumulation is order-exact, so every tiling (and
-    both halo regimes) is bit-identical to the untiled kernel.  ``shift`` /
-    ``bias_shift`` override the write-back scale gaps for mixed-format
-    operands (default: same-format Qm.n semantics).
+    both halo regimes) is bit-identical to the untiled kernel.  Mixed operand
+    widths are legal (both sides widen to int32 before the tap GEMMs) and the
+    output is stored on ``fmt.storage_dtype``; ``shift`` / ``bias_shift``
+    override the write-back scale gaps for mixed-format operands (default:
+    same-format Qm.n semantics) — an int8-rung ``fmt`` with an int16-grid
+    ``shift`` is the mixed-boundary epilogue of DESIGN.md §11.
     """
-    assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
+    assert xq.dtype in (jnp.int8, jnp.int16) and wq.dtype in (jnp.int8, jnp.int16)
     n, h, wdt, cin = xq.shape
     kh, kw, cin2, cout = wq.shape
     assert cin == cin2
@@ -479,12 +484,14 @@ def conv2d_q16_pallas(
             shift=fmt.frac_bits if shift is None else shift,
             bias_shift=fmt.frac_bits if bias_shift is None else bias_shift,
             raw_min=fmt.raw_min, raw_max=fmt.raw_max,
+            out_dtype=fmt.storage_dtype,
         )
         return _conv_dma_call(
             xq, wmat, bias_row, kh=kh, kw=kw, stride=stride, ho=ho, wo=wo,
             cout=cout, tau=tau, coutp=coutp, tile_rows=tile_rows,
             tile_cols=tile_cols, fixed_point=True, epilogue=epilogue,
-            out_dtype=jnp.int16, acc_dtype=jnp.int32, interpret=interpret,
+            out_dtype=fmt.storage_dtype, acc_dtype=jnp.int32,
+            interpret=interpret,
         )
     xq, x_specs, tiles, th, halo = _conv_grid(xq, kh, stride, ho, tile_rows)
     operands = [xq] * (2 if halo else 1) + [wmat]
@@ -507,6 +514,7 @@ def conv2d_q16_pallas(
         bias_shift=fmt.frac_bits if bias_shift is None else bias_shift,
         raw_min=fmt.raw_min,
         raw_max=fmt.raw_max,
+        out_dtype=fmt.storage_dtype,
         halo=halo,
         fused_bias=bias is not None,
     )
@@ -515,7 +523,9 @@ def conv2d_q16_pallas(
         grid=(n, tiles, coutp // tau),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, th, wo, tau), lambda b, r, t: (b, r, 0, t)),
-        out_shape=jax.ShapeDtypeStruct((n, tiles * th, wo, coutp), jnp.int16),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, tiles * th, wo, coutp), fmt.storage_dtype
+        ),
         scratch_shapes=[pltpu.VMEM((th * wo, tau), jnp.int32)],
         interpret=interpret,
     )(*operands)

@@ -1,9 +1,14 @@
-"""The paper's 16-bit Q2.14 fixed-point compute unit as a Pallas kernel.
+"""The paper's fixed-point compute unit as a Pallas kernel (int16 and int8).
 
-int16 x int16 products accumulated in int32 (TPU-native accumulator width;
-the FPGA DSP48 cascade is 48-bit — difference documented in DESIGN.md §2),
-then a saturating round-shift write-back to Q(m).(n) int16, exactly matching
-``repro.core.quantization.qmatmul_ref``.
+int16/int8 x int16/int8 products accumulated in int32 (TPU-native
+accumulator width; the FPGA DSP48 cascade is 48-bit — difference documented
+in DESIGN.md §2), then a saturating round-shift write-back onto the output
+format's storage rung (Q2.14 int16, Q1.7/Q2.6 int8, ...), exactly matching
+``repro.core.quantization.qmatmul_ref`` / ``qtensor_matmul_ref``.  Mixed
+operand widths are legal — both sides widen to int32 before the MXU dot —
+and an int8-rung ``fmt`` with an int16-grid accumulator shift *is* the
+mixed-boundary epilogue (DESIGN.md §11): the layer writes its successor's
+grid directly, no float hop.
 """
 from __future__ import annotations
 
@@ -20,7 +25,8 @@ from repro.core.tiling import MatmulBlock
 __all__ = ["matmul_q16_pallas"]
 
 
-def _qmm_kernel(*refs, shift, bias_shift, raw_min, raw_max, relu, wide):
+def _qmm_kernel(*refs, shift, bias_shift, raw_min, raw_max, relu, wide,
+                out_dtype):
     # refs: (x, w[, bias], out, acc) — bias operand only present when fused.
     if len(refs) == 5:
         x_ref, w_ref, b_ref, o_ref, acc_ref = refs
@@ -54,7 +60,8 @@ def _qmm_kernel(*refs, shift, bias_shift, raw_min, raw_max, relu, wide):
             # saturates on logits outside the int16 grid's range.
             o_ref[...] = acc
             return
-        o_ref[...] = shift_saturate_i32(acc, shift, raw_min, raw_max)
+        o_ref[...] = shift_saturate_i32(acc, shift, raw_min, raw_max,
+                                        out_dtype)
 
 
 @functools.partial(
@@ -74,16 +81,18 @@ def matmul_q16_pallas(
     wide: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """xq: (m, k) int16 raw @ wq: (k, n) int16 raw -> (m, n) int16 raw.
+    """xq: (m, k) raw @ wq: (k, n) raw -> (m, n) raw on ``fmt``'s rung.
 
-    ``bias``: (n,) int16 raw, fused into the write-back; ``relu``: fused on
-    the int32 accumulator before the saturating shift.  ``shift`` /
+    Operands are int16 or int8 raws (mixed widths are fine — both widen to
+    int32 before the dot) and the output is stored as ``fmt.storage_dtype``.
+    ``bias``: (n,) int16/int8 raw, fused into the write-back; ``relu``:
+    fused on the int32 accumulator before the saturating shift.  ``shift`` /
     ``bias_shift`` override the write-back scale gaps for mixed-format
     operands (default: same-format semantics, one ``fmt.frac_bits`` each);
     ``wide=True`` returns the raw int32 accumulator (no requantize) for the
     final-layer read-out.
     """
-    assert xq.dtype == jnp.int16 and wq.dtype == jnp.int16
+    assert xq.dtype in (jnp.int8, jnp.int16) and wq.dtype in (jnp.int8, jnp.int16)
     m, k = xq.shape
     k2, n = wq.shape
     assert k == k2
@@ -111,13 +120,16 @@ def matmul_q16_pallas(
         raw_max=fmt.raw_max,
         relu=relu,
         wide=wide,
+        out_dtype=fmt.storage_dtype,
     )
     out = pl.pallas_call(
         kernel,
         grid=(mp // bm, np_ // bn, kp // bk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32 if wide else jnp.int16),
+        out_shape=jax.ShapeDtypeStruct(
+            (mp, np_), jnp.int32 if wide else fmt.storage_dtype
+        ),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(*operands)

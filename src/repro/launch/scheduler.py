@@ -434,7 +434,10 @@ class ServeScheduler:
             T.quantize_params(self.tpl, cfg, params, self.policy)
             if self.policy.quantized else params
         )
-        self.cache_dtype = jnp.int16 if self.policy.quantized else None
+        # quantized policies resolve the KV dtype per scan group inside
+        # init_cache (int8 where the precision DSE dropped the group's grid
+        # to the 8-bit rung, int16 elsewhere); float serving keeps cfg.dtype
+        self.cache_dtype = None
         self.cache_len = self.sched.resolved_cache_len()
         if max(self.sched.ladder) > self.cache_len:
             raise ValueError("cache_len smaller than the largest bucket")
@@ -515,7 +518,9 @@ class ServeScheduler:
     def _make_cache(self):
         """A fresh slot-indexed KV cache, sharded over slots under a mesh."""
         cache = T.init_cache(self.cfg, self.sched.slots, self.cache_len,
-                             dtype=self.cache_dtype, per_slot=True)
+                             dtype=self.cache_dtype, per_slot=True,
+                             policy=self.policy if self.policy.quantized
+                             else None)
         if self.mesh is not None:
             shapes = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache)

@@ -161,7 +161,12 @@ def run_scheduler(cfg, params, tpl, *, requests: int, prompt_len: int,
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--backend", default="xla", choices=["xla", "pallas", "q16"])
+    ap.add_argument("--backend", default="xla",
+                    choices=["xla", "pallas", "q16", "q8"])
+    ap.add_argument("--precision-budget", type=float, default=0.99,
+                    help="with --backend q8: minimum per-layer solo-flip "
+                         "argmax agreement for the precision DSE to drop a "
+                         "layer group to the int8 rung (DESIGN.md §11)")
     ap.add_argument("--prompts", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -206,24 +211,43 @@ def main(argv=None):
     # One template (and thus one execution engine + shared plan cache) for the
     # whole serve session: prefill and every decode step reuse the same plan,
     # so DSE block selection runs at most once per distinct GEMM shape.
-    tpl = default_template(args.backend)
+    # --backend q8 is the mixed-precision tier of the same q16 template: the
+    # kernels are dtype-polymorphic, so the template backend stays "q16" and
+    # the precision DSE decides per layer group which grid it runs on.
+    backend = "q16" if args.backend == "q8" else args.backend
+    tpl = default_template(backend)
     # --backend q16 serves grid-resident fixed point (DESIGN.md §8): weights
     # quantized once, int16 KV cache, activation grid picked by a small
     # max-abs calibration pass over one synthetic batch.
     policy = None
-    if args.backend == "q16":
+    if backend == "q16":
         cal = synthetic_batch(args.seed + 1, 7, 2, max(args.prompt_len, 8),
                               cfg.vocab)
         try:
             policy = T.calibrate_policy(tpl, cfg, params, cal)
         except ValueError as err:
             if args.scheduler:  # the batched path must not silently degrade
-                raise SystemExit(f"--backend q16 --scheduler: {err}") from err
+                raise SystemExit(f"--backend {args.backend} --scheduler: "
+                                 f"{err}") from err
             print(f"[serve] WARNING: {err}; falling back to per-op q16 "
                   f"(float round-trips between layers)")
         else:
-            print(f"[serve] numerics: q16 grid-resident, activations "
-                  f"{policy.fmt.name} (calibrated), weights per-tensor")
+            if args.backend == "q8":
+                # the drift-aware precision DSE (DESIGN.md §11): measure each
+                # group's solo-flip argmax drift, drop groups meeting the
+                # budget to the int8 rung, pin every choice in the registry
+                # (warm restarts replay the pins with zero searches)
+                policy = T.calibrate_precision(
+                    tpl, cfg, params, cal, budget=args.precision_budget,
+                    policy=policy)
+                n8 = sum(1 for _, f in policy.layer_fmts if f.total_bits == 8)
+                print(f"[serve] numerics: mixed int8/int16 grid-resident, "
+                      f"base {policy.fmt.name}, {n8}/"
+                      f"{len(policy.layer_fmts)} groups on the int8 rung "
+                      f"(budget {args.precision_budget})")
+            else:
+                print(f"[serve] numerics: q16 grid-resident, activations "
+                      f"{policy.fmt.name} (calibrated), weights per-tensor")
     sampling = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                               seed=args.seed)
     if not sampling.greedy:

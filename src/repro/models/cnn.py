@@ -40,8 +40,10 @@ __all__ = [
     "NetworkPlan",
     "init_cnn",
     "plan_cnn",
+    "cnn_layer_names",
     "quantize_cnn_params",
     "calibrate_cnn_policy",
+    "calibrate_cnn_precision",
     "cnn_forward",
 ]
 
@@ -94,12 +96,13 @@ CNN_ZOO = {c.name: c for c in (ALEXNET, VGG16, LENET)}
 def _maxpool(x, w: int):
     """NHWC max pool, window w, stride w (PS-plane op).
 
-    QTensor inputs pool on the int16 raws directly: dequantization is
-    monotone, so max-of-raw == raw-of-max and the activation never leaves
-    the fixed-point grid for pooling (DESIGN.md §8).
+    QTensor inputs pool on the integer raws directly (int16 or int8 per the
+    grid's rung): dequantization is monotone, so max-of-raw == raw-of-max
+    and the activation never leaves the fixed-point grid for pooling
+    (DESIGN.md §8).
     """
     if isinstance(x, QTensor):
-        init = jnp.array(jnp.iinfo(jnp.int16).min, jnp.int16)
+        init = jnp.array(jnp.iinfo(x.raw.dtype).min, x.raw.dtype)
         return QTensor(
             jax.lax.reduce_window(
                 x.raw, init, jax.lax.max, (1, w, w, 1), (1, w, w, 1), "VALID"
@@ -362,35 +365,52 @@ def plan_cnn(
     return plan
 
 
+def cnn_layer_names(spec: CNNSpec) -> tuple:
+    """The per-layer precision-DSE names, forward order: conv0.. then fc0..
+    (the final entry is the classifier).  A layer's name keys its *input*
+    activation grid in ``NumericsPolicy.layer_fmts`` and the plan store."""
+    return tuple(f"conv{i}" for i in range(len(spec.convs))) + tuple(
+        f"fc{i}" for i in range(len(spec.fcs) + 1)
+    )
+
+
 def quantize_cnn_params(tpl: Template, spec: CNNSpec, params,
                         policy: NumericsPolicy):
-    """Quantize-once CNN parameter preparation (DESIGN.md §8).
+    """Quantize-once CNN parameter preparation (DESIGN.md §8, §11).
 
     Conv and FC weights become per-tensor max-abs calibrated QTensors;
-    biases pin to the activation grid.  Memoized by parameter-tree identity
-    in the engine's qparam cache — repeated inference calls never touch the
-    float weights again.
+    biases pin to the layer's activation grid.  Under a mixed policy each
+    layer calibrates against its *own* input grid (``policy.fmt_for``): an
+    int8-assigned layer gets int8 weights and the 24/23-bit accumulator
+    headroom budget instead of 16/15.  Memoized by parameter-tree identity
+    (and policy — ``layer_fmts`` is part of the key) in the engine's qparam
+    cache — repeated inference calls never touch the float weights again.
     """
     policy = validate_policy(tpl.config, policy)
     if not policy.quantized:
         return params
     eng = tpl.engine
+    names = cnn_layer_names(spec)
 
     def build():
-        def qdense(leaf):
+        def qdense(leaf, name):
             # conv (kh, kw, cin, cout) reduces over kh*kw*cin; fc (k, n)
             # over k — the accumulator headroom rule bounds both
             axes = tuple(range(leaf["w"].ndim - 1))
+            fmt = policy.fmt_for(name)
             return {
                 "w": eng.quantize_weight(leaf["w"], policy,
                                          contraction_axes=axes,
-                                         fused_bias=True),
-                "b": eng.quantize_weight(leaf["b"], policy, fmt=policy.fmt),
+                                         fused_bias=True,
+                                         act_fmt=fmt,
+                                         total_bits=fmt.total_bits),
+                "b": eng.quantize_weight(leaf["b"], policy, fmt=fmt),
             }
 
+        nc = len(params["convs"])
         return {
-            "convs": [qdense(p) for p in params["convs"]],
-            "fcs": [qdense(p) for p in params["fcs"]],
+            "convs": [qdense(p, names[i]) for i, p in enumerate(params["convs"])],
+            "fcs": [qdense(p, names[nc + i]) for i, p in enumerate(params["fcs"])],
         }
 
     return eng.qparams_for(params, policy, build)
@@ -413,6 +433,95 @@ def calibrate_cnn_policy(tpl: Template, spec: CNNSpec, params, x,
     if policy != base:
         tpl.engine.drop_qparams(params, base)  # release the probe tree
     return policy
+
+
+def calibrate_cnn_precision(
+    tpl: Template,
+    spec: CNNSpec,
+    params,
+    x,
+    *,
+    budget: float = 0.99,
+    policy: Optional[NumericsPolicy] = None,
+    drift: Optional[dict] = None,
+    ref=None,
+) -> NumericsPolicy:
+    """The drift-aware per-layer precision DSE for a CNN (DESIGN.md §11).
+
+    Warm path: when the PlanRegistry holds a pinned precision choice for
+    *every* layer of ``spec`` (loaded from the v3 plan store), the mixed
+    policy is rebuilt from the pins — zero forwards, zero searches, each
+    layer a registry hit (the ``REPRO_PLAN_ASSERT_WARM`` contract).
+
+    Cold path: measure each layer's *solo-flip* drift — run the network
+    with only that layer's activations dropped to the int8 rung of the
+    calibrated grid and record the argmax agreement vs the float reference
+    (``drift`` short-circuits the sweep with pre-measured rows, e.g. from
+    ``benchmarks/precision_drift.py``'s JSON) — then assign int8 wherever
+    the agreement meets ``budget`` (:func:`repro.core.dse.choose_precision`)
+    and pin every choice with ``source: measured`` provenance.
+
+    ``ref`` overrides the reference class predictions (an (N,) argmax
+    array).  The default is the pure-float forward; a QAT-trained network
+    should pass the argmax of its *fake-quant* float forward — the clamp
+    is part of the trained model, so the unclamped float path is not the
+    semantics deployment must agree with (see examples/train_lenet_q214).
+    """
+    import dataclasses
+
+    from repro.core import dse
+    from repro.core.quantization import int8_rung
+
+    policy = policy or calibrate_cnn_policy(tpl, spec, params, x)
+    eng = tpl.engine
+    reg = eng.plan_cache
+    hw = tpl.config.hw
+    names = cnn_layer_names(spec)
+    low = int8_rung(policy.fmt)
+    if low is None:
+        return policy  # the calibrated range has no int8 rung
+    pins = {name: reg.precision_for(spec.name, name, hw) for name in names}
+    if all(p is not None for p in pins.values()):
+        fmts = tuple(sorted(((n, p.fmt) for n, p in pins.items()),
+                            key=lambda kv: kv[0]))
+        return dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
+    if ref is None:
+        ref = jnp.argmax(cnn_forward(tpl, spec, params, x), axis=-1)
+
+    def probe_agreement(fmts):
+        probe = dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
+        qp = quantize_cnn_params(tpl, spec, params, probe)
+        got = jnp.argmax(cnn_forward(tpl, spec, qp, x, policy=probe), axis=-1)
+        eng.drop_qparams(params, probe)  # release the probe tree
+        return float(jnp.mean(got == ref))
+
+    if drift is None:
+        drift = {name: probe_agreement(((name, low),)) for name in names}
+    chosen = dse.choose_precision(drift, budget, policy.fmt, low)
+
+    def full_plan():
+        return tuple(sorted(((n, chosen.get(n, policy.fmt)) for n in names),
+                            key=lambda kv: kv[0]))
+
+    # solo-flip drifts compose: the joint plan can land below the *network*
+    # budget even when every member met it alone.  Greedily revert the int8
+    # layer with the lowest measured agreement until the composed network
+    # meets the budget — the accuracy constraint is on the network, not the
+    # per-layer probes.
+    while probe_agreement(full_plan()) < budget:
+        int8s = [n for n in names if chosen[n].total_bits == 8]
+        if not int8s:
+            break
+        chosen[min(int8s, key=lambda n: (drift[n], n))] = policy.fmt
+    for name in names:
+        reg.pin_precision(
+            spec.name, name, chosen.get(name, policy.fmt),
+            drift=drift.get(name), spec=hw, source="measured",
+        )
+    fmts = tuple(sorted(
+        ((n, chosen.get(n, policy.fmt)) for n in names), key=lambda kv: kv[0]
+    ))
+    return dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
 
 
 def cnn_forward(
@@ -448,14 +557,21 @@ def cnn_forward(
         eng = tpl.engine
         plan = plan or plan_cnn(tpl, spec, x.shape)
         halos = plan.pool_halos or (None,) * len(plan.convs)
-        h = eng.quant(x, policy.fmt)
+        names = cnn_layer_names(spec)
+        # each layer writes its *successor's* input grid in-kernel — the
+        # mixed-boundary epilogue (DESIGN.md §11): an int8 layer feeds an
+        # int16 layer (and vice versa) with zero float round-trips.  Pooling
+        # is grid-transparent, so conv output and pooled map share the grid.
+        h = eng.quant(x, policy.fmt_for(names[0]))
         if plan.spatial > 1:
             h = _to_slabs(h, plan.spatial)
-        for p, (cout, k, stride, pad, pool), cp, ph in zip(
+        nc = len(plan.convs)
+        for i, (p, (cout, k, stride, pad, pool), cp, ph) in enumerate(zip(
             params["convs"], spec.convs, plan.convs, halos
-        ):
+        )):
             h = tpl.conv2d(h, p["w"], stride=stride, padding=pad,
-                           bias=p["b"], relu=True, plan=cp)
+                           bias=p["b"], relu=True,
+                           qout=policy.fmt_for(names[i + 1]), plan=cp)
             if pool:
                 h = _maxpool_spatial(h, pool, ph) if ph is not None else _maxpool(h, pool)
         if plan.spatial > 1:
@@ -464,7 +580,8 @@ def cnn_forward(
         last = len(params["fcs"]) - 1
         for i, (p, gp) in enumerate(zip(params["fcs"], plan.fcs)):
             if i < last:
-                h = tpl.linear(h, p["w"], p["b"], relu=True, plan=gp)
+                h = tpl.linear(h, p["w"], p["b"], relu=True,
+                               qout=policy.fmt_for(names[nc + i + 1]), plan=gp)
             else:
                 # final classifier: exact accumulator read-out (the single
                 # counted dequantize of the whole network)

@@ -64,8 +64,10 @@ __all__ = [
     "plan_pattern",
     "init_params",
     "param_axes",
+    "precision_group_names",
     "quantize_params",
     "calibrate_policy",
+    "calibrate_precision",
     "q16_island_counts",
     "forward",
     "loss_fn",
@@ -266,28 +268,40 @@ def quantize_params(tpl: Template, cfg, params, policy: NumericsPolicy):
     eng = tpl.engine
 
     def build():
-        def qdense(leaf):
+        def qdense(leaf, fmt):
             # shape (..., k, n): k is the contraction the accumulator
-            # headroom rule bounds (Engine.quantize_weight)
+            # headroom rule bounds (Engine.quantize_weight); act_fmt names
+            # the group's activation grid so int8 groups get int8 weights
+            # and the widened headroom budget (DESIGN.md §11)
             out = {"w": eng.quantize_weight(leaf["w"], policy,
                                             contraction_axes=(-2,),
-                                            fused_bias="b" in leaf)}
+                                            fused_bias="b" in leaf,
+                                            act_fmt=fmt,
+                                            total_bits=fmt.total_bits)}
             if "b" in leaf:
-                out["b"] = eng.quantize_weight(leaf["b"], policy, fmt=policy.fmt)
+                out["b"] = eng.quantize_weight(leaf["b"], policy, fmt=fmt)
             return out
 
-        def qlayer(lp):
+        def qlayer(lp, name):
+            fmt = policy.fmt_for(name)
             out = dict(lp)  # norms (and anything float-island) pass through
-            out["attn"] = {k: qdense(v) for k, v in lp["attn"].items()}
-            out["ffn"] = {k: qdense(v) for k, v in lp["ffn"].items()}
+            out["attn"] = {k: qdense(v, fmt) for k, v in lp["attn"].items()}
+            out["ffn"] = {k: qdense(v, fmt) for k, v in lp["ffn"].items()}
             return out
 
         qp = dict(params)
-        qp["blocks"] = tuple(qlayer(b) for b in params["blocks"])
-        qp["tail"] = tuple(qlayer(tc) for tc in params["tail"])
+        qp["blocks"] = tuple(
+            qlayer(b, f"g{i}") for i, b in enumerate(params["blocks"])
+        )
+        qp["tail"] = tuple(
+            qlayer(tc, f"tail{j}") for j, tc in enumerate(params["tail"])
+        )
         head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        hf = policy.fmt_for("head")
         qp["lm_head"] = {"w": eng.quantize_weight(head_w, policy,
-                                                  contraction_axes=(-2,))}
+                                                  contraction_axes=(-2,),
+                                                  act_fmt=hf,
+                                                  total_bits=hf.total_bits)}
         return qp
 
     return eng.qparams_for(params, policy, build)
@@ -321,6 +335,103 @@ def calibrate_policy(tpl: Template, cfg, params, tokens,
     return policy
 
 
+def precision_group_names(cfg) -> tuple:
+    """Names of the per-precision scan groups of ``cfg``'s stack.
+
+    The scanned stack stages one traced body per pattern position, so the
+    finest grid a single scan can carry is per-group: "g{i}" for pattern
+    position i, "tail{j}" for the j-th remainder layer, plus "head" for the
+    final post-norm quantize feeding the wide logits read-out.
+    """
+    pattern, _, r = _split(cfg)
+    return (tuple(f"g{i}" for i in range(len(pattern)))
+            + tuple(f"tail{j}" for j in range(r)) + ("head",))
+
+
+def calibrate_precision(tpl: Template, cfg, params, tokens, *,
+                        budget: float = 0.99,
+                        policy: Optional[NumericsPolicy] = None,
+                        drift: Optional[dict] = None,
+                        ref=None) -> NumericsPolicy:
+    """The drift-aware per-group precision DSE for a transformer (§11).
+
+    Warm path: when the PlanRegistry holds a pinned precision choice for
+    *every* group of ``cfg`` (loaded from the v3 plan store), the mixed
+    policy is rebuilt from the pins — zero forwards, zero searches, each
+    group a registry hit (the ``REPRO_PLAN_ASSERT_WARM`` contract).
+
+    Cold path: measure each group's *solo-flip* drift — run the network
+    with only that group's activations dropped to the int8 rung of the
+    calibrated grid and record the argmax agreement vs the float reference
+    (``drift`` short-circuits the sweep with pre-measured rows, e.g. from
+    ``benchmarks/precision_drift.py``'s JSON) — then assign int8 wherever
+    the agreement meets ``budget`` (:func:`repro.core.dse.choose_precision`)
+    and pin every choice with ``source: measured`` provenance.
+
+    ``ref`` overrides the reference predictions (a (B, S) argmax array);
+    the default is the pure-float teacher-forced forward.
+    """
+    import dataclasses
+
+    from repro.core import dse
+    from repro.core.quantization import int8_rung
+
+    policy = policy or calibrate_policy(tpl, cfg, params, tokens)
+    eng = tpl.engine
+    reg = eng.plan_cache
+    hw = tpl.config.hw
+    names = precision_group_names(cfg)
+    low = int8_rung(policy.fmt)
+    if low is None:
+        return policy  # the calibrated range has no int8 rung
+    pins = {name: reg.precision_for(cfg.name, name, hw) for name in names}
+    if all(p is not None for p in pins.values()):
+        fmts = tuple(sorted(((n, p.fmt) for n, p in pins.items()),
+                            key=lambda kv: kv[0]))
+        return dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
+    if ref is None:
+        ref = jnp.argmax(forward(tpl, cfg, params, tokens, mode="fwd")[0],
+                         axis=-1)
+
+    def probe_agreement(fmts):
+        probe = dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
+        qp = quantize_params(tpl, cfg, params, probe)
+        got = jnp.argmax(
+            forward(tpl, cfg, qp, tokens, mode="fwd", policy=probe)[0],
+            axis=-1,
+        )
+        eng.drop_qparams(params, probe)  # release the probe tree
+        return float(jnp.mean(got == ref))
+
+    if drift is None:
+        drift = {name: probe_agreement(((name, low),)) for name in names}
+    chosen = dse.choose_precision(drift, budget, policy.fmt, low)
+
+    def full_plan():
+        return tuple(sorted(((n, chosen.get(n, policy.fmt)) for n in names),
+                            key=lambda kv: kv[0]))
+
+    # solo-flip drifts compose: the joint plan can land below the *network*
+    # budget even when every member met it alone.  Greedily revert the int8
+    # group with the lowest measured agreement until the composed network
+    # meets the budget — the accuracy constraint is on the network, not the
+    # per-group probes.
+    while probe_agreement(full_plan()) < budget:
+        int8s = [n for n in names if chosen[n].total_bits == 8]
+        if not int8s:
+            break
+        chosen[min(int8s, key=lambda n: (drift[n], n))] = policy.fmt
+    for name in names:
+        reg.pin_precision(
+            cfg.name, name, chosen.get(name, policy.fmt),
+            drift=drift.get(name), spec=hw, source="measured",
+        )
+    fmts = tuple(sorted(
+        ((n, chosen.get(n, policy.fmt)) for n in names), key=lambda kv: kv[0]
+    ))
+    return dataclasses.replace(policy, name="mixed", layer_fmts=fmts)
+
+
 def q16_island_counts(cfg, *, mode: str = "decode") -> dict:
     """The residency law: designated float islands of one traced q16 step.
 
@@ -346,6 +457,23 @@ def q16_island_counts(cfg, *, mode: str = "decode") -> dict:
 # ---------------------------------------------------------------------------
 # per-layer execution
 # ---------------------------------------------------------------------------
+
+
+def _group_policy(policy, name: str):
+    """Rebind a mixed policy to one scan group's activation grid.
+
+    The precision granularity of the scanned stack is the pattern position
+    ("g0".."gP-1"), the tail layers ("tail0"..), and "head" — one traced
+    body per group, so per-group is the finest grid a single scan can
+    carry.  For single-grid policies (``layer_fmts`` empty) this is the
+    identity; transformer islands re-quantize at every sublayer norm, so
+    inter-group boundaries need no mixed epilogue (unlike the CNN path).
+    """
+    if policy is None or not policy.layer_fmts:
+        return policy
+    import dataclasses
+
+    return dataclasses.replace(policy, fmt=policy.fmt_for(name), layer_fmts=())
 
 
 def _run_layer(tpl, cfg, plan: LayerPlan, p, h, *, positions, mode,
@@ -462,7 +590,8 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             for i, plan in enumerate(pattern):
                 hh, _, a = _run_layer(
                     tpl, cfg, plan, xs[i], hh,
-                    positions=positions, mode=mode, ctx=ctx, policy=policy,
+                    positions=positions, mode=mode, ctx=ctx,
+                    policy=_group_policy(policy, f"g{i}"),
                 )
                 aux = aux + a
             return (hh, aux), None
@@ -481,7 +610,8 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         for j in range(n_tail):
             h, _, a = _run_layer(
                 tpl, cfg, pattern[j], params["tail"][j], h,
-                positions=positions, mode=mode, ctx=ctx, policy=policy,
+                positions=positions, mode=mode, ctx=ctx,
+                policy=_group_policy(policy, f"tail{j}"),
             )
             aux = aux + a
         return h, None, aux
@@ -493,7 +623,8 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             for i, plan in enumerate(pattern):
                 hh, c, a = _run_layer(
                     tpl, cfg, plan, xs[i], hh, positions=positions,
-                    mode=mode, ctx=ctx, cache_len=cache_len, policy=policy,
+                    mode=mode, ctx=ctx, cache_len=cache_len,
+                    policy=_group_policy(policy, f"g{i}"),
                 )
                 caches.append(c)
                 aux = aux + a
@@ -506,7 +637,8 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         for j in range(n_tail):
             h, c, a = _run_layer(
                 tpl, cfg, pattern[j], params["tail"][j], h, positions=positions,
-                mode=mode, ctx=ctx, cache_len=cache_len, policy=policy,
+                mode=mode, ctx=ctx, cache_len=cache_len,
+                policy=_group_policy(policy, f"tail{j}"),
             )
             tail_caches.append(c)
             aux = aux + a
@@ -521,7 +653,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
             hh, c, _ = _run_layer(
                 tpl, cfg, plan, p_group[i], hh,
                 positions=positions, mode=mode, cache=c_group[i], t=t,
-                policy=policy, n_valid=n_valid,
+                policy=_group_policy(policy, f"g{i}"), n_valid=n_valid,
             )
             newcs.append(c)
         return hh, tuple(newcs)
@@ -532,7 +664,7 @@ def _run_stack(tpl, cfg, params, h, *, pattern, mode, positions,
         h, c, _ = _run_layer(
             tpl, cfg, pattern[j], params["tail"][j], h,
             positions=positions, mode=mode, cache=cache["tail"][j], t=t,
-            policy=policy, n_valid=n_valid,
+            policy=_group_policy(policy, f"tail{j}"), n_valid=n_valid,
         )
         tail_caches.append(c)
     return h, {"blocks": cache_blocks, "tail": tuple(tail_caches)}, jnp.zeros((), jnp.float32)
@@ -573,9 +705,10 @@ def _head(tpl, cfg, params, h, *, policy=None):
         policy is not None and policy.quantized
         and isinstance(params.get("lm_head", {}).get("w"), QTensor)
     ):
-        # final logits boundary: quantize the post-norm hidden once, read the
-        # int32 accumulator out exactly — logits never saturate on the grid
-        hq = tpl.quant(h, policy.fmt)
+        # final logits boundary: quantize the post-norm hidden once (on the
+        # head's grid under a mixed policy), read the int32 accumulator out
+        # exactly — logits never saturate on the grid
+        hq = tpl.quant(h, policy.fmt_for("head"))
         logits = tpl.matmul(hq, params["lm_head"]["w"], wide=True)
     else:
         w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]["w"]
@@ -762,24 +895,36 @@ def _init_layer_cache(cfg, plan: LayerPlan, batch, cache_len, dtype,
     return c
 
 
-def init_cache(cfg, batch: int, cache_len: int, dtype=None, *, per_slot: bool = False):
+def init_cache(cfg, batch: int, cache_len: int, dtype=None, *, per_slot: bool = False,
+               policy=None):
     """Zero-initialized decode cache with the exact prefill-cache structure.
 
     ``per_slot=True`` builds the slot-indexed layout (self-attention pos
     vectors become (B, C)) used by the continuous-batching scheduler, where
-    each batch row is an independent session at its own decode position."""
-    dtype = jnp.dtype(dtype or cfg.dtype)
+    each batch row is an independent session at its own decode position.
+
+    A quantized ``policy`` resolves the KV storage dtype *per scan group*:
+    group "g{i}"/"tail{j}" caches take ``policy.fmt_for(name).storage_dtype``
+    (int8 for layers the precision DSE dropped to the 8-bit rung, int16
+    otherwise), so a mixed plan's cache bytes shrink exactly where the plan
+    says they may.  An explicit ``dtype`` overrides the policy uniformly."""
     pattern, g, r = _split(cfg)
 
-    def stacked(plan):
-        one = _init_layer_cache(cfg, plan, batch, cache_len, dtype, per_slot=per_slot)
+    def group_dtype(name):
+        if dtype is None and policy is not None and policy.quantized:
+            return policy.fmt_for(name).storage_dtype
+        return jnp.dtype(dtype or cfg.dtype)
+
+    def stacked(plan, name):
+        one = _init_layer_cache(cfg, plan, batch, cache_len, group_dtype(name),
+                                per_slot=per_slot)
         return jax.tree.map(lambda a: jnp.broadcast_to(a, (g, *a.shape)), one)
 
     return {
-        "blocks": tuple(stacked(p) for p in pattern),
+        "blocks": tuple(stacked(p, f"g{i}") for i, p in enumerate(pattern)),
         "tail": tuple(
-            _init_layer_cache(cfg, pattern[j], batch, cache_len, dtype,
-                              per_slot=per_slot)
+            _init_layer_cache(cfg, pattern[j], batch, cache_len,
+                              group_dtype(f"tail{j}"), per_slot=per_slot)
             for j in range(r)
         ),
     }

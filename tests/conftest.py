@@ -52,6 +52,16 @@ except ModuleNotFoundError:
 
         return _Strategy(draw)
 
+    def _sampled_from(elements):
+        choices = list(elements)
+
+        def draw(rng, i):
+            if i < len(choices):
+                return choices[i]
+            return rng.choice(choices)
+
+        return _Strategy(draw)
+
     def _lists(elements, min_size=0, max_size=10):
         def draw(rng, i):
             if i == 0:
@@ -99,6 +109,7 @@ except ModuleNotFoundError:
     _st.integers = _integers
     _st.floats = _floats
     _st.lists = _lists
+    _st.sampled_from = _sampled_from
     _h.given = _given
     _h.settings = _settings
     _h.strategies = _st

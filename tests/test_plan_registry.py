@@ -26,6 +26,7 @@ from repro.core.engine import (
     PlanCache,
     PlanRegistry,
     PlanStoreError,
+    PrecisionChoice,
     load_plan_store,
     plan_cache_for,
     plan_store_stats,
@@ -34,6 +35,7 @@ from repro.core.engine import (
     save_plan_store,
     warm_start_plan_store,
 )
+from repro.core.quantization import Q2_6, Q2_14
 from repro.core.template import TemplateConfig, default_template
 from repro.core.tiling import TPU_V5E
 
@@ -114,11 +116,108 @@ def test_store_is_versioned_json(tmp_path):
     with open(path) as f:
         doc = json.load(f)
     assert doc["format"] == "repro-plan-store"
-    assert doc["version"] == 2
+    assert doc["version"] == 3
     assert doc["specs"] and doc["gemm"] and doc["conv"]
+    assert "precision" in doc
     # every entry carries provenance
     assert all(e["source"] in ("analytic", "measured") for e in doc["gemm"])
     assert all(e["source"] in ("analytic", "measured") for e in doc["conv"])
+
+
+# ---------------------------------------------------------------------------
+# precision pins: v3 round-trip + lenient v2/v1 migration (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def test_precision_pin_round_trip(tmp_path):
+    """Pinned per-layer grids (fmt + drift + provenance) survive
+    save -> clear -> load bit-identically, and a warm replay serves them as
+    hits with zero misses."""
+    reg, _ = _populated_registry()
+    reg.pin_precision("lenet", "conv0", Q2_6, drift=1.0)
+    reg.pin_precision("lenet", "fc2", Q2_14, drift=0.97)
+    path = str(tmp_path / "store.json")
+    reg.save(path)
+
+    loaded = PlanRegistry()
+    n = loaded.load(path)
+    assert n == len(reg) > 0
+    assert loaded.misses == 0 and loaded.hits == 0, "loads are not lookups"
+    assert loaded.to_doc() == reg.to_doc(), "round-trip must be bit-identical"
+    assert loaded.precision_plan("lenet") == {"conv0": Q2_6, "fc2": Q2_14}
+    assert loaded.precision_for("lenet", "conv0") == PrecisionChoice(Q2_6, 1.0)
+    assert loaded.hits == 1 and loaded.misses == 0, \
+        "warm precision replay is hits-only (REPRO_PLAN_ASSERT_WARM contract)"
+
+
+def test_precision_miss_charged_by_pin_not_lookup():
+    """An absent pin is not a miss (the sweep itself charges it via
+    pin_precision(searched=True)); replayed pins charge nothing."""
+    reg = PlanRegistry()
+    assert reg.precision_for("net", "l0") is None
+    assert reg.misses == 0 and reg.hits == 0
+    reg.pin_precision("net", "l0", Q2_6, drift=0.995)
+    assert reg.misses == 1
+    reg.pin_precision("net", "l1", Q2_14, searched=False)
+    assert reg.misses == 1
+
+
+def test_v2_store_migrates_gemm_and_conv_without_precision(tmp_path):
+    """A v2 (pre-precision) store loads leniently: gemm + conv entries merge
+    unchanged, precision pins simply don't exist — even a stray precision
+    section in a v2 doc is ignored rather than trusted."""
+    reg, (g, c, c_nofit) = _populated_registry()
+    reg.pin_precision("lenet", "conv0", Q2_6, drift=1.0)
+    doc = reg.to_doc()
+    doc["version"] = 2  # keep the (stray) precision section on purpose
+    path = tmp_path / "v2.json"
+    path.write_text(json.dumps(doc))
+
+    loaded = PlanRegistry()
+    n = loaded.load(str(path))
+    assert n == len(reg._blocks) + len(reg._conv_tiles)
+    assert loaded._blocks == reg._blocks
+    assert loaded._conv_tiles == reg._conv_tiles
+    assert loaded.precision_plan("lenet") == {}
+    # the migrated plans still serve without a search
+    eng = Engine(TemplateConfig(backend="pallas", interpret=True),
+                 plan_cache=loaded)
+    assert eng.plan_gemm(256, 512, 256) == g
+    assert eng.plan_conv((1, 32, 32, 8), (3, 3, 8, 16), stride=1, padding=1) == c
+    assert loaded.misses == 0
+
+
+def test_v1_store_migrates_gemm_only(tmp_path):
+    """v1 keeps gemm entries; its pre-column-tiling conv docs and (stray)
+    precision pins are dropped so those layers re-plan/re-sweep."""
+    reg, _ = _populated_registry()
+    reg.pin_precision("lenet", "conv0", Q2_6, drift=1.0)
+    doc = reg.to_doc()
+    doc["version"] = 1
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(doc))
+
+    loaded = PlanRegistry()
+    n = loaded.load(str(path))
+    assert n == len(reg._blocks)
+    assert loaded._blocks == reg._blocks
+    assert not loaded._conv_tiles
+    assert loaded.precision_plan("lenet") == {}
+
+
+def test_bad_precision_entry_rejected(tmp_path):
+    """A v3 store with a malformed precision entry is rejected loudly and
+    leaves nothing half-merged."""
+    reg, _ = _populated_registry()
+    reg.pin_precision("lenet", "conv0", Q2_6, drift=1.0)
+    doc = reg.to_doc()
+    doc["precision"][0]["fmt"] = [2, 6]  # missing total_bits
+    path = tmp_path / "badprec.json"
+    path.write_text(json.dumps(doc))
+    fresh = PlanRegistry()
+    with pytest.raises(PlanStoreError, match="precision"):
+        fresh.load(str(path))
+    assert len(fresh) == 0
 
 
 # ---------------------------------------------------------------------------

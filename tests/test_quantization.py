@@ -8,12 +8,15 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.quantization import (
     NumericsPolicy,
+    Q1_7,
+    Q2_6,
     Q2_14,
     QFormat,
     QTensor,
     calibrate_format,
     dequantize,
     fake_quant_fmt,
+    int8_rung,
     qmatmul_real,
     qmatmul_ref,
     qtensor_matmul_ref,
@@ -209,6 +212,89 @@ def test_policy_validation():
     assert not NumericsPolicy("float").quantized
     with pytest.raises(ValueError):
         NumericsPolicy("int8")
+
+
+# ---------------------------------------------------------------------------
+# int8 rung (Q1.7 / Q2.6): the precision ladder of DESIGN.md §11
+# ---------------------------------------------------------------------------
+
+
+def test_int8_rung_ladder():
+    assert int8_rung(Q2_14) == Q2_6
+    assert int8_rung(QFormat(1, 15)) == Q1_7
+    assert int8_rung(QFormat(9, 7)) is None  # range needs > 7 + sign bits
+
+
+def test_int8_format_ranges_and_storage():
+    assert Q2_6.raw_max == 127 and Q2_6.raw_min == -128
+    assert Q1_7.raw_max == 127 and Q1_7.raw_min == -128
+    assert Q2_6.max_val == pytest.approx(2 - 2 ** -6)
+    assert Q1_7.max_val == pytest.approx(1 - 2 ** -7)
+    assert quantize(jnp.zeros((4,)), Q2_6).dtype == jnp.int8
+    assert quantize(jnp.zeros((4,)), Q1_7).dtype == jnp.int8
+
+
+@given(st.floats(min_value=0.0, max_value=8.0, allow_nan=False))
+@settings(max_examples=150, deadline=None)
+def test_int8_saturation_pins_at_127(x):
+    """Out-of-range values pin to exactly +127 / -128 on both int8 rungs —
+    the same exact-boundary law the int16 grid obeys."""
+    for fmt in (Q2_6, Q1_7):
+        if x >= fmt.max_val:
+            assert int(quantize(jnp.float32(x), fmt)) == 127
+        if -x <= fmt.min_val:
+            assert int(quantize(jnp.float32(-x), fmt)) == -128
+
+
+@given(st.integers(min_value=-(2 ** 6), max_value=2 ** 6 - 1))
+@settings(max_examples=100, deadline=None)
+def test_int8_quantize_tie_rounds_half_to_even(n):
+    """The 8-bit quantize stage keeps round-half-to-even, same as int16."""
+    x = (n + 0.5) * Q2_6.resolution
+    got = int(quantize(jnp.float32(x), Q2_6))
+    want = n if n % 2 == 0 else n + 1
+    assert got == want
+
+
+def test_int8_requantize_tie_rounds_half_up():
+    """Accumulator write-back onto the int8 rung keeps the half-up adder-tree
+    convention — the documented asymmetry vs the quantize stage holds at
+    every storage width."""
+    shift = 2 * Q2_6.frac_bits - Q2_6.frac_bits  # same-format product shift
+    half = 1 << (shift - 1)
+    acc = jnp.array([half, 3 * half, -half, -3 * half], jnp.int32)
+    out = requantize_i32(acc, shift, Q2_6)
+    assert out.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(out), [1, 2, 0, -1])
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.sampled_from(["q8xq16", "q16xq8", "q8xq8"]),
+       st.sampled_from([Q2_14, Q2_6]))
+@settings(max_examples=60, deadline=None)
+def test_mixed_width_matmul_oracle_bitexact(seed, widths, out_fmt):
+    """q8<->q16 mixed-width GEMM through qtensor_matmul_ref is bit-identical
+    to an int64 numpy emulation of accumulate + half-up shift + saturate,
+    for int16 and int8 output rungs alike (the mixed-boundary epilogue)."""
+    xf = Q2_6 if widths.startswith("q8") else Q2_14
+    wf = Q2_6 if widths.endswith("q8") else Q2_14
+    rng = np.random.default_rng(seed)
+    xq = QTensor(jnp.asarray(
+        rng.integers(xf.raw_min, xf.raw_max + 1, size=(3, 5)),
+        xf.storage_dtype), xf)
+    wq = QTensor(jnp.asarray(
+        rng.integers(wf.raw_min, wf.raw_max + 1, size=(5, 4)),
+        wf.storage_dtype), wf)
+    out = qtensor_matmul_ref(xq, wq, out_fmt)
+    assert out.fmt == out_fmt and out.raw.dtype == out_fmt.storage_dtype
+    acc = np.asarray(xq.raw, np.int64) @ np.asarray(wq.raw, np.int64)
+    shift = xf.frac_bits + wf.frac_bits - out_fmt.frac_bits
+    if shift > 0:
+        shifted = (acc + (1 << (shift - 1))) >> shift  # round half-up
+    else:
+        shifted = acc << (-shift)  # exact up-scale (q8xq8 -> int16 grid)
+    want = np.clip(shifted, out_fmt.raw_min, out_fmt.raw_max)
+    np.testing.assert_array_equal(np.asarray(out.raw, np.int64), want)
 
 
 @given(st.integers(min_value=10, max_value=15), st.integers(min_value=8, max_value=15))
